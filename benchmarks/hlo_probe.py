@@ -1,0 +1,126 @@
+"""HLO profile probe for the §Perf hypothesis loop (one cell at a time).
+
+    PYTHONPATH=src python -m benchmarks.hlo_probe --arch qwen3-0.6b \
+        --shape decode_32k [--multi]
+
+Prints the cell's collective sites grouped by (kind, dtype+shape, group
+size), each with its dynamic execution count (loop trip multipliers) and
+total wire GiB, annotated with the op_name metadata — i.e., WHICH model
+operation produced the traffic. This is the closest thing to a profiler the
+CPU-only container offers, and it is what the §Perf iterations read.
+"""
+# XLA_FLAGS must be set before jax init — same pattern as dryrun.py
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import re
+import sys
+from collections import defaultdict
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.launch.hloparse import (COLLECTIVES, group_size, shape_bytes,
+                                   split_computations, trip_count,
+                                   wire_bytes, _COLL_RE, _SHAPE_RE,
+                                   cost_summary)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def probe(arch: str, shape_name: str, multi: bool = False, top: int = 25):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi)
+    spec = build_step(cfg, shape, mesh)
+    wrap = lambda s: jax.tree_util.tree_map(
+        lambda x: jax.sharding.NamedSharding(mesh, x), s)
+    with mesh:
+        compiled = jax.jit(
+            spec.fn, in_shardings=wrap(spec.in_shardings),
+            out_shardings=wrap(spec.out_shardings),
+            donate_argnums=spec.donate).lower(*spec.args).compile()
+    hlo = compiled.as_text()
+
+    comps = split_computations(hlo)
+    # per-computation dynamic multiplier via the same walk
+    entry = re.search(r"^ENTRY\s+(%[\w\.\-]+)", hlo, re.M).group(1)
+    mult = defaultdict(float)
+
+    def walk(name, m, depth=0):
+        if depth > 64 or name not in comps:
+            return
+        mult[name] += m
+        comp = comps[name]
+        for cond, body in comp.whiles:
+            tc = trip_count(comps[cond]) if cond in comps else 1
+            walk(body, m * max(tc, 1), depth + 1)
+        for callee in comp.calls:
+            walk(callee, m, depth + 1)
+
+    walk(entry, 1.0)
+
+    # group collective sites
+    headers = [(m.start(), m.group(1))
+               for m in re.finditer(
+                   r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s*\(.*\)\s*->", hlo, re.M)]
+    groups = defaultdict(lambda: {"count": 0.0, "wire": 0.0, "ops": set()})
+    for i, (pos, cname) in enumerate(headers):
+        end = headers[i + 1][0] if i + 1 < len(headers) else len(hlo)
+        if mult.get(cname, 0) == 0:
+            continue
+        for line in hlo[pos:end].splitlines():
+            cm = _COLL_RE.search(line)
+            if not cm or "-done(" in line:
+                continue
+            shapes = _SHAPE_RE.findall(cm.group(1))
+            if cm.group(3) and len(shapes) > 1:
+                shapes = shapes[-1:]
+            rb = sum(shape_bytes(d, dims) for d, dims in shapes)
+            g = group_size(line)
+            sig = (cm.group(2),
+                   "+".join(f"{d}[{dims}]" for d, dims in shapes), g)
+            mm = _META_RE.search(line)
+            op = mm.group(1) if mm else "?"
+            op = re.sub(r"jit\(\w+\)/", "", op)[-90:]
+            groups[sig]["count"] += mult[cname]
+            groups[sig]["wire"] += wire_bytes(cm.group(2), rb, g) * mult[cname]
+            groups[sig]["ops"].add(op)
+
+    total = sum(v["wire"] for v in groups.values())
+    print(f"\n== {arch} x {shape_name} ({'multi' if multi else 'single'}-pod"
+          f", {mesh.devices.size} chips) ==")
+    c = cost_summary(hlo)
+    print(f"flops/device {c.flops/1e12:.2f} TF | traffic "
+          f"{c.traffic_bytes/2**30:.2f} GiB | collective wire "
+          f"{total/2**30:.2f} GiB\n")
+    rows = sorted(groups.items(), key=lambda kv: -kv[1]["wire"])
+    print(f"{'kind':<18}{'result shape':<34}{'G':>4}{'execs':>8}"
+          f"{'wire GiB':>10}  op")
+    for (kind, shp, g), v in rows[:top]:
+        op = sorted(v["ops"])[0]
+        print(f"{kind:<18}{shp:<34}{g:>4}{v['count']:>8.0f}"
+              f"{v['wire']/2**30:>10.3f}  {op}")
+    mem = compiled.memory_analysis()
+    print(f"\nmemory: args {mem.argument_size_in_bytes/2**30:.2f} GiB, "
+          f"temp {mem.temp_size_in_bytes/2**30:.2f} GiB "
+          f"(HBM budget 16 GiB)")
+    return total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+    probe(args.arch, args.shape, args.multi, args.top)
+
+
+if __name__ == "__main__":
+    main()

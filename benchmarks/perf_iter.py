@@ -1,0 +1,114 @@
+"""§Perf iteration harness: A/B a config change on one dry-run cell.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter --arch qwen3-0.6b \
+        --shape decode_32k --set decode_gather_q=False --set ...
+
+Compiles the cell twice — baseline (--base overrides, default none) and
+variant (--set overrides) — and prints the three roofline terms side by
+side plus the deltas. This is the measure step of the
+hypothesis -> change -> measure -> validate loop; results are logged in
+EXPERIMENTS.md §Perf.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.launch.hloparse import collective_summary, cost_summary
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+
+
+def parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        out[k] = v
+    return out
+
+
+def measure(arch, shape_name, overrides, mesh):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    spec = build_step(cfg, shape, mesh)
+    wrap = lambda s: jax.tree_util.tree_map(
+        lambda x: jax.sharding.NamedSharding(mesh, x), s)
+    t0 = time.monotonic()
+    with mesh:
+        compiled = jax.jit(
+            spec.fn, in_shardings=wrap(spec.in_shardings),
+            out_shardings=wrap(spec.out_shardings),
+            donate_argnums=spec.donate).lower(*spec.args).compile()
+    dt = time.monotonic() - t0
+    hlo = compiled.as_text()
+    c = cost_summary(hlo)
+    coll = collective_summary(hlo)
+    mem = compiled.memory_analysis()
+    return {
+        "compile_s": dt,
+        "compute_s": c.flops / PEAK,
+        "memory_s": c.traffic_bytes / HBM,
+        "collective_s": coll.wire_bytes_total / ICI,
+        "flops_tf": c.flops / 1e12,
+        "traffic_gib": c.traffic_bytes / 2**30,
+        "wire_gib": coll.wire_bytes_total / 2**30,
+        "args_gib": mem.argument_size_in_bytes / 2**30,
+        "temp_gib": mem.temp_size_in_bytes / 2**30,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", metavar="KEY=VAL",
+                    help="variant overrides")
+    ap.add_argument("--base", action="append", metavar="KEY=VAL",
+                    help="baseline overrides")
+    ap.add_argument("--multi", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi)
+    base = measure(args.arch, args.shape, parse_overrides(args.base), mesh)
+    var = measure(args.arch, args.shape, parse_overrides(args.set), mesh)
+
+    print(f"\n{args.arch} x {args.shape} "
+          f"({'multi' if args.multi else 'single'}-pod)")
+    print(f"{'metric':<14}{'baseline':>12}{'variant':>12}{'delta':>9}")
+    for k in ("compute_s", "memory_s", "collective_s", "flops_tf",
+              "traffic_gib", "wire_gib", "args_gib", "temp_gib",
+              "compile_s"):
+        b, v = base[k], var[k]
+        d = (v - b) / b * 100 if b else float("inf")
+        print(f"{k:<14}{b:>12.4f}{v:>12.4f}{d:>8.1f}%")
+    dom_b = max(("compute_s", "memory_s", "collective_s"),
+                key=lambda k: base[k])
+    dom_v = max(("compute_s", "memory_s", "collective_s"),
+                key=lambda k: var[k])
+    print(f"bottleneck: {dom_b} ({base[dom_b]:.3f}s) -> {dom_v} "
+          f"({var[dom_v]:.3f}s)")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

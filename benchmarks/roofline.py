@@ -1,0 +1,157 @@
+"""Roofline analysis (deliverable g): three terms per (arch × shape × mesh).
+
+Reads the dry-run artifacts (benchmarks/results/dryrun_<mesh>.json — written
+by ``python -m repro.launch.dryrun --all --out benchmarks/results``) and
+derives, per cell:
+
+  compute_s    = HLO_FLOPs_per_device   / peak_FLOP/s          (197e12 bf16)
+  memory_s     = HLO_bytes_per_device   / HBM_bw               (819e9 B/s)
+  collective_s = wire_bytes_per_device  / ICI_link_bw          (50e9 B/s)
+
+cost_analysis() FLOPs/bytes are per-device for the SPMD executable; the
+collective wire bytes come from repro.launch.hloparse (result shapes x
+ring-algorithm factors x loop trip counts — see that module's docstring).
+
+  MODEL_FLOPS  = 6·N·D (train) | 2·N·D (prefill) | 2·N·B (decode),
+                 N = active params (MoE) or params (dense), D = B·T tokens
+  useful ratio = MODEL_FLOPS_per_device / HLO_FLOPs_per_device
+                 (catches remat / redundant-compute waste)
+  roofline fraction = ideal_compute_s / max(three terms)
+                 (fraction of peak the USEFUL flops achieve assuming perfect
+                  compute/memory/collective overlap — the §Perf score)
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+V5E = {
+    "peak_flops": 197e12,     # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,          # B/s per chip
+    "ici_bw": 50e9,           # B/s per ICI link (one direction engaged)
+    "hbm_bytes": 16 * 2**30,  # HBM capacity
+}
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def model_flops(rec: Dict) -> float:
+    """Global useful FLOPs for the cell's program (6ND / 2ND / 2NB)."""
+    n = rec["active_params"]
+    program = rec.get("program", "train_step")
+    # tokens processed by one program invocation
+    from repro.configs.base import SHAPES
+    shape = SHAPES[rec["shape"]]
+    if program == "train_step":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if program == "prefill_step":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # serve_step: one token
+
+
+def analyse_cell(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["chips"]
+    compute_s = rec["flops_per_device"] / V5E["peak_flops"]
+    memory_s = rec["bytes_per_device"] / V5E["hbm_bw"]
+    coll_bytes = rec["collectives"]["wire_bytes_per_device"]
+    collective_s = coll_bytes / V5E["ici_bw"]
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    mf_dev = mf / chips
+    ideal_s = mf_dev / V5E["peak_flops"]
+    lower_bound = max(terms.values())
+    useful = mf_dev / max(rec["flops_per_device"], 1.0)
+    frac = ideal_s / lower_bound if lower_bound > 0 else 0.0
+    mem = rec.get("memory", {})
+    state_gib = mem.get("argument_bytes", 0) / 2**30
+    temp_gib = mem.get("temp_bytes", 0) / 2**30
+    fits = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+            <= V5E["hbm_bytes"])
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "program": rec["program"],
+        "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "args_gib": state_gib, "temp_gib": temp_gib, "fits_hbm": fits,
+    }
+
+
+def suggestion(row: Dict) -> str:
+    b = row["bottleneck"]
+    if b == "collective":
+        return ("shrink TP residual/grad traffic: bf16 collectives, "
+                "2D/expert sharding, microbatch overlap")
+    if b == "memory":
+        if row["useful_ratio"] < 0.5:
+            return "cut remat'd activation re-reads (policy: dots-only)"
+        return "raise arithmetic intensity: fuse ops, bigger per-chip tiles"
+    if row["useful_ratio"] < 0.55:
+        return "remove remat recompute (policy or kernel fusion)"
+    return "near compute roofline; only kernel-level gains remain"
+
+
+def load(mesh_tag: str) -> List[Dict]:
+    path = os.path.join(RESULTS_DIR, f"dryrun_{mesh_tag}.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def analyse(mesh_tag: str = "single") -> List[Dict]:
+    rows = []
+    for rec in load(mesh_tag):
+        row = analyse_cell(rec)
+        if row:
+            row["hint"] = suggestion(row)
+            rows.append(row)
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | prog | compute_s | memory_s | coll_s | "
+           "bottleneck | useful | roofline | fits HBM |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['program'].replace('_step','')} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | **{r['bottleneck']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+            f"| {'Y' if r['fits_hbm'] else 'N'} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main(argv=None):
+    argv = argv if argv is not None else sys.argv[1:]
+    tag = argv[0] if argv else "single"
+    rows = analyse(tag)
+    out_json = os.path.join(RESULTS_DIR, f"roofline_{tag}.json")
+    with open(out_json, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(markdown_table(rows))
+    # worst cells = hillclimb candidates
+    ranked = sorted(rows, key=lambda r: r["roofline_fraction"])
+    print("## worst roofline fractions")
+    for r in ranked[:5]:
+        print(f"  {r['arch']} x {r['shape']}: {r['roofline_fraction']:.4f} "
+              f"({r['bottleneck']}-bound) -> {r['hint']}")
+    most_coll = sorted(rows, key=lambda r: -r["collective_s"])[:3]
+    print("## most collective-bound")
+    for r in most_coll:
+        print(f"  {r['arch']} x {r['shape']}: {r['collective_s']:.3f}s wire")
+    print(f"-> {out_json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

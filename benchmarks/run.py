@@ -1,0 +1,103 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [section ...]
+
+Sections: fig4 fig5 fig6 fig7 ablation real sweep roofline validate
+Output: CSV-ish ``key=value`` rows per section + a final validation table of
+simulated-vs-paper-claimed numbers.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _emit(rows):
+    for row in rows:
+        print(",".join(f"{k}={v}" for k, v in row.items()), flush=True)
+
+
+def section_figs(names):
+    from benchmarks.figures import FIGS
+    for name in names:
+        print(f"\n== {name} ==", flush=True)
+        _emit(FIGS[name]())
+
+
+def section_sweep():
+    print("\n== sweep_launch (T4 compile-cache prepositioning) ==",
+          flush=True)
+    from benchmarks.sweep_launch import run
+    _emit(run())
+
+
+def section_roofline():
+    print("\n== roofline (from dry-run artifacts) ==", flush=True)
+    import os
+    from benchmarks import roofline
+    for tag in ("single", "multi"):
+        path = os.path.join(roofline.RESULTS_DIR, f"dryrun_{tag}.json")
+        if os.path.exists(path):
+            print(f"-- mesh: {tag} --")
+            roofline.main([tag])
+        else:
+            print(f"-- mesh {tag}: dry-run artifacts missing; run "
+                  f"`python -m repro.launch.dryrun --all --mesh {tag} "
+                  f"--out benchmarks/results` first --")
+
+
+def section_validate():
+    """Simulated vs the paper's claimed numbers (§IV)."""
+    from repro.core.scheduler import measure_launch
+    print("\n== validation vs paper claims ==", flush=True)
+    checks = [
+        ("TF 32,768 procs (512x64)", "tensorflow", 512, 64, "two-tier", True,
+         "< 5 s", lambda t: t < 5),
+        ("Octave 32,768 procs", "octave", 512, 64, "two-tier", True,
+         "< 10 s", lambda t: t < 10),
+        ("Octave 262,144 procs (512/node)", "octave", 512, 512, "two-tier",
+         True, "< 40 s", lambda t: t < 40),
+        ("naive 40k-core MATLAB launch", "matlab", 625, 64, "flat", False,
+         "30-60 min", lambda t: 1800 <= t <= 3600),
+    ]
+    ok = True
+    for name, app, n, p, strat, prep, claim, check in checks:
+        r = measure_launch(app, n, p, strategy=strat, prepositioned=prep)
+        good = check(r.launch_time)
+        ok &= good
+        print(f"claim={name},paper={claim},simulated={r.launch_time:.2f}s,"
+              f"rate={r.launch_rate:.0f}/s,pass={good}", flush=True)
+    r = measure_launch("octave", 512, 256)
+    plateau = 4000 <= r.launch_rate <= 12000
+    ok &= plateau
+    print(f"claim=sustained launch rate,paper=~6000/s,"
+          f"simulated={r.launch_rate:.0f}/s,pass={plateau}", flush=True)
+    return ok
+
+
+ALL = ["fig4", "fig5", "fig6", "fig7", "ablation", "real", "sweep",
+       "roofline", "validate"]
+
+
+def main() -> int:
+    names = sys.argv[1:] or ALL
+    t0 = time.monotonic()
+    ok = True
+    fig_names = [n for n in names if n.startswith("fig") or
+                 n in ("ablation", "real")]
+    if fig_names:
+        section_figs(fig_names)
+    if "sweep" in names:
+        section_sweep()
+    if "roofline" in names:
+        section_roofline()
+    if "validate" in names:
+        ok = section_validate()
+    print(f"\nbenchmarks done in {time.monotonic() - t0:.1f}s "
+          f"{'(all validations pass)' if ok else '(VALIDATION FAILURES)'}",
+          flush=True)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,100 @@
+"""Fault-tolerance demo: preemption, restart, node failure, stragglers.
+
+    PYTHONPATH=src python examples/fault_tolerance.py
+
+Two layers of the story:
+ 1. SCHEDULER level (the paper's cluster): a node dies mid-job -> the job is
+    requeued and re-placed off the dead node; a straggler is detected and
+    re-dispatched.
+ 2. TRAINER level (the payload): SIGTERM triggers checkpoint-then-exit; a
+    new Trainer resumes from the checkpoint and the loss trajectory matches
+    the uninterrupted run exactly (deterministic data by step index).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import tempfile
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.cluster import Cluster, ClusterSpec
+from repro.core.events import Sim
+from repro.core.scheduler import JobState, Scheduler
+from repro.data.pipeline import SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def scheduler_level():
+    print("== scheduler level (simulated TX-Green) ==")
+    sim = Sim()
+    cluster = Cluster(sim, ClusterSpec(n_nodes=8))
+    cluster.preposition("octave")
+    events = []
+    sched = Scheduler(sim, cluster, straggler_factor=3.0,
+                      on_event=lambda kind, job: events.append(
+                          (round(sim.now, 2), kind, job.jid)))
+    job = sched.submit("analyst", "octave", 4, 64, work_seconds=60.0)
+    sched.run(until=10.0)
+    dead = job.nodes[0].id
+    print(f"t=10s: node {dead} dies while job {job.jid} is RUNNING")
+    sched.fail_node(dead)
+    sched.run()
+    assert job.state == JobState.COMPLETED
+    print(f"job requeued {job.requeues}x, straggler re-dispatches "
+          f"{job.straggler_redispatches}, completed at t={job.finished_at:.1f}s "
+          f"on nodes {[nd.id for nd in job.nodes]} (node {dead} avoided)")
+    print("events:", events)
+
+
+def trainer_level():
+    print("\n== trainer level (payload checkpoint/restart) ==")
+    cfg = dataclasses.replace(
+        get_config("qwen3-0.6b").reduced(),
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=64, block_pattern=(), remat="none",
+        param_dtype="float32")
+    mesh = make_host_mesh(1, 1)
+    src = SyntheticLM(cfg.vocab_size, 16, 4, seed=0)
+
+    with tempfile.TemporaryDirectory() as d:
+        ref_dir, ckpt_dir = os.path.join(d, "ref"), os.path.join(d, "ckpt")
+        # uninterrupted reference
+        tr = Trainer(cfg, mesh, src.batch,
+                     TrainerConfig(ckpt_dir=ref_dir, ckpt_every=10**6,
+                                   log_every=10**6), log=lambda s: None)
+        ref = tr.run(16)["losses"]
+
+        # preempted run: SIGTERM after 8 steps
+        tc = TrainerConfig(ckpt_dir=ckpt_dir, ckpt_every=4, log_every=10**6)
+        tr1 = Trainer(cfg, mesh, src.batch, tc, log=print)
+        orig = tr1.step_fn
+        n = {"v": 0}
+
+        def signal_at_8(*a, **kw):
+            n["v"] += 1
+            if n["v"] == 8:
+                os.kill(os.getpid(), signal.SIGTERM)
+            return orig(*a, **kw)
+
+        tr1.step_fn = signal_at_8
+        out1 = tr1.run(16)
+        print(f"preempted at step {out1['step']} (checkpoint written)")
+
+        # restart resumes and reproduces the reference trajectory
+        tr2 = Trainer(cfg, mesh, src.batch, tc, log=print)
+        out2 = tr2.run(16 - out1["step"])
+        merged = out1["losses"] + out2["losses"]
+        np.testing.assert_allclose(merged, ref, rtol=1e-5, atol=1e-6)
+        print(f"restart from step {out1['step']}: trajectory identical to "
+              f"the uninterrupted run ({len(merged)} steps) — no data loss, "
+              f"no duplication")
+
+
+if __name__ == "__main__":
+    scheduler_level()
+    trainer_level()
+    print("\nfault-tolerance demo OK")

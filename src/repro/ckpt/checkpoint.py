@@ -1,0 +1,171 @@
+"""Sharded checkpointing: atomic, async, elastic-restorable.
+
+Layout:  <dir>/step_<N>/
+            manifest.msgpack   — tree structure, shapes, dtypes, step, meta
+            arrays.npz         — flattened leaves (key = escaped tree path)
+
+Save is atomic (write to .tmp, rename) and optionally async (background
+thread; ``wait()`` joins). Restore takes target shardings — a checkpoint
+written on one mesh restores onto any other (elastic rescale): arrays are
+loaded on host then device_put with the new NamedSharding.
+
+On a real multi-host pod each host writes its address-able shards and the
+manifest carries the global shape — the single-process layout here is the
+degenerate case of that design (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+_NATIVE = {"float32", "float64", "float16", "int32", "int64", "int16",
+           "int8", "uint8", "uint16", "uint32", "uint64", "bool"}
+
+
+def _to_native(arr: np.ndarray):
+    """numpy can't round-trip ml_dtypes (bf16 etc.) through npz: store a
+    uint view + the logical dtype name."""
+    name = str(arr.dtype)
+    if name in _NATIVE:
+        return arr, name
+    view = arr.view({2: np.uint16, 1: np.uint8, 4: np.uint32}[arr.dtype.itemsize])
+    return view, name
+
+
+def _from_native(arr: np.ndarray, name: str):
+    if name in _NATIVE:
+        return arr
+    import ml_dtypes
+    return arr.view(np.dtype(getattr(ml_dtypes, name)))
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {_path_str(p): np.asarray(v) for p, v in flat}
+
+
+def save(ckpt_dir: str, step: int, tree: Any, meta: Optional[dict] = None):
+    """Blocking atomic save."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    arrays = _flatten(tree)
+    natives = {k: _to_native(v) for k, v in arrays.items()}
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{k.replace("/", "\x01"): v for k, (v, _) in natives.items()})
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "step": step,
+        "meta": meta or {},
+        "treedef": str(treedef),
+        "leaves": {k: {"shape": list(v.shape), "dtype": name}
+                   for k, (v, name) in natives.items()},
+    }
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
+            shardings: Any = None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). ``shardings``: optional matching tree of
+    NamedShardings for elastic placement on the current mesh."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(d, "arrays.npz"))
+    arrays = {}
+    for k in data.files:
+        key = k.replace("\x01", "/")
+        arrays[key] = _from_native(data[k], manifest["leaves"][key]["dtype"])
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    sh_flat = (jax.tree_util.tree_flatten(shardings)[0]
+               if shardings is not None else [None] * len(flat))
+    leaves = []
+    for (path, leaf), sh in zip(flat, sh_flat):
+        key = _path_str(path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        tgt_dtype = leaf.dtype
+        val = jnp.asarray(arr).astype(tgt_dtype)
+        if sh is not None:
+            val = jax.device_put(val, sh)
+        leaves.append(val)
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+    return tree, manifest
+
+
+class CheckpointManager:
+    """Async writer + retention. One background thread; save() returns
+    immediately, wait() joins (called before process exit / next save)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def save_async(self, step: int, tree: Any, meta: Optional[dict] = None):
+        self.wait()
+        # materialize on host before handing to the thread (donated buffers
+        # may be reused by the next step otherwise)
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+
+        def work():
+            save(self.dir, step, host_tree, meta)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(int(m.group(1)) for d in os.listdir(self.dir)
+                       if (m := re.fullmatch(r"step_(\d+)", d)))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,27 @@
+"""nemotron-4-340b [dense] — GQA, squared-ReLU (ungated MLP). [arXiv:2402.16819]
+
+Largest assigned cell. Fits v5e HBM only with FSDP(ZeRO-3)+TP 2-D weight
+sharding, bf16 optimizer moments, sequence-parallel residual activations and
+per-sequence microbatching — see DESIGN.md §5 and EXPERIMENTS.md §Dry-run.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    source="arXiv:2402.16819",
+    n_layers=96,
+    d_model=18432,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=192,
+    d_ff=73728,
+    vocab_size=256000,
+    activation="squared_relu",
+    gated_mlp=False,
+    rope_theta=10_000.0,
+    opt_state_dtype="bfloat16",
+    microbatches=16,
+    fsdp=True,
+    seq_parallel=True,
+)

@@ -1,0 +1,102 @@
+"""Real-process two-tier launch harness (methodology check, §III/§IV).
+
+The simulator (core.cluster/launcher) models TX-Green; this module runs the
+SAME two launch topologies with real OS processes on this host, so the
+simulator's qualitative claim — two-tier >> flat dispatch — is validated
+against actual fork/exec behaviour, not just a cost model:
+
+  flat      the "scheduler" (this process) forks every worker itself:
+            N_nodes * P sequential dispatch operations from one loop.
+  two-tier  the scheduler forks ONE launcher per simulated node; each
+            launcher spawns and backgrounds its P workers locally and
+            reports when all are running (paper T3).
+
+Workers touch a tiny "application" payload and signal readiness via their
+stdout pipe; launch time = submit -> last worker ready. Worker counts are
+kept modest (hundreds, not 262k) — the point is the *ratio* between
+topologies, which is load-independent.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+from dataclasses import dataclass
+from typing import List
+
+WORKER = ("import sys,os\n"
+          "sys.stdout.write('R')\n"
+          "sys.stdout.flush()\n"
+          "os.read(0, 1)\n")          # stay alive until stdin closes
+
+LAUNCHER = r"""
+import subprocess, sys, os
+p = int(sys.argv[1])
+procs = [subprocess.Popen([sys.executable, '-c', %r],
+                          stdin=subprocess.PIPE, stdout=subprocess.PIPE)
+         for _ in range(p)]
+for pr in procs:
+    assert pr.stdout.read(1) == b'R'
+sys.stdout.write('A')                 # all P workers running on this "node"
+sys.stdout.flush()
+for pr in procs:
+    pr.stdin.close()
+for pr in procs:
+    pr.wait()
+""" % WORKER
+
+
+@dataclass
+class RealLaunchResult:
+    strategy: str
+    n_nodes: int
+    procs_per_node: int
+    launch_time: float
+
+    @property
+    def total_procs(self) -> int:
+        return self.n_nodes * self.procs_per_node
+
+    @property
+    def launch_rate(self) -> float:
+        return self.total_procs / max(self.launch_time, 1e-9)
+
+
+def flat_launch(n_nodes: int, procs_per_node: int) -> RealLaunchResult:
+    """Central loop forks every worker (the naive topology)."""
+    t0 = time.monotonic()
+    procs = []
+    for _ in range(n_nodes * procs_per_node):
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", WORKER],
+            stdin=subprocess.PIPE, stdout=subprocess.PIPE))
+    for pr in procs:
+        assert pr.stdout.read(1) == b"R"
+    dt = time.monotonic() - t0
+    for pr in procs:
+        pr.stdin.close()
+    for pr in procs:
+        pr.wait()
+    return RealLaunchResult("flat", n_nodes, procs_per_node, dt)
+
+
+def two_tier_launch(n_nodes: int, procs_per_node: int) -> RealLaunchResult:
+    """One launcher per node; launchers spawn their workers in parallel."""
+    t0 = time.monotonic()
+    launchers = [subprocess.Popen(
+        [sys.executable, "-c", LAUNCHER, str(procs_per_node)],
+        stdout=subprocess.PIPE)
+        for _ in range(n_nodes)]
+    for lp in launchers:
+        assert lp.stdout.read(1) == b"A"
+    dt = time.monotonic() - t0
+    for lp in launchers:
+        lp.wait()
+    return RealLaunchResult("two-tier", n_nodes, procs_per_node, dt)
+
+
+def compare(n_nodes: int = 8, procs_per_node: int = 16
+            ) -> List[RealLaunchResult]:
+    return [flat_launch(n_nodes, procs_per_node),
+            two_tier_launch(n_nodes, procs_per_node)]

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLM, PackedBinReader, make_batch_fn
+
+__all__ = ["SyntheticLM", "PackedBinReader", "make_batch_fn"]

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships with a BlockSpec-tiled pl.pallas_call implementation, a
+jit'd wrapper (ops.py) and a pure-jnp oracle (ref.py); all are validated in
+interpret mode on CPU (tests/test_kernels.py) and target TPU v5e.
+"""
+from . import flash_attention, ops, ref, rmsnorm, ssd_scan  # noqa: F401

@@ -1,0 +1,39 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only; on a real
+TPU runtime set REPRO_PALLAS_COMPILE=1 (or pass interpret=False) to run the
+compiled Mosaic kernels.
+"""
+from __future__ import annotations
+
+import os
+
+from .flash_attention import flash_attention
+from .rmsnorm import rmsnorm
+from .slstm_scan import slstm_scan
+from .ssd_scan import ssd_scan
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0,
+              block_q=128, block_k=512):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           q_offset=q_offset, block_q=block_q,
+                           block_k=block_k, interpret=INTERPRET)
+
+
+def ssd(x, a, B, C, *, chunk=256):
+    return ssd_scan(x, a, B, C, chunk=chunk, interpret=INTERPRET)
+
+
+def norm(x, gain, *, eps=1e-6):
+    return rmsnorm(x, gain, eps=eps, interpret=INTERPRET)
+
+
+def slstm(wx, r, b, *, chunk=64):
+    return slstm_scan(wx, r, b, chunk=chunk, interpret=INTERPRET)
+
+
+__all__ = ["attention", "ssd", "norm", "slstm", "flash_attention",
+           "ssd_scan", "rmsnorm", "slstm_scan", "INTERPRET"]

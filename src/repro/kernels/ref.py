@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attend_naive
+from repro.models.common import rms_norm
+from repro.models.ssm import ssd_scan_ref
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  q_offset: int = 0):
+    """Dense attention oracle. Same signature contract as flash_attention."""
+    return attend_naive(q, k, v, causal=causal, window=window,
+                        q_offset=q_offset)
+
+
+def ssd_ref(x, a, B, C):
+    """Sequential SSD oracle (one step at a time). Heads pre-expanded."""
+    y, _ = ssd_scan_ref(x, a, B, C)
+    return y
+
+
+def rmsnorm_ref(x, gain, *, eps: float = 1e-6):
+    return rms_norm(x, gain, eps)
+
+
+def slstm_ref(wx, r, b):
+    """Sequential sLSTM oracle. wx: [B,T,nh,4dh] gate-major per head;
+    r: [nh,dh,4dh]; b: [nh,4dh] -> hs [B,T,nh,dh]. Same stabilized gating
+    as repro.models.xlstm._slstm_cell, specialized to per-head layout."""
+    F32 = jnp.float32
+    B, T, nh, gd = wx.shape
+    dh = gd // 4
+    I_CLAMP = 15.0
+
+    def step(state, wx_t):
+        c, n, m, h = state                                 # [B,nh,dh]
+        rec = jnp.einsum("bhd,hde->bhe", h, r.astype(F32))
+        pre = wx_t.astype(F32) + rec + b.astype(F32)[None]
+        i_r, f_r, z_r, o_r = [pre[..., k * dh:(k + 1) * dh]
+                              for k in range(4)]
+        i_log = jnp.minimum(i_r, I_CLAMP)
+        f_log = jax.nn.log_sigmoid(f_r)
+        m_new = jnp.maximum(f_log + m, i_log)
+        ig = jnp.exp(i_log - m_new)
+        fg = jnp.exp(f_log + m - m_new)
+        c_new = fg * c + ig * jnp.tanh(z_r)
+        n_new = fg * n + ig
+        h_new = jax.nn.sigmoid(o_r) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    z = jnp.zeros((B, nh, dh), F32)
+    state0 = (z, z, jnp.full((B, nh, dh), -1e30, F32), z)
+    _, hs = jax.lax.scan(step, state0, wx.transpose(1, 0, 2, 3))
+    return hs.transpose(1, 0, 2, 3).astype(wx.dtype)

@@ -1,0 +1,176 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first use.
+
+DOC = """Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input-shape) cell, lower + compile the cell's
+program (train_step / prefill_step / serve_step) on
+
+  * the single-pod production mesh  (16, 16)    = 256 chips, and
+  * the multi-pod production mesh   (2, 16, 16) = 512 chips,
+
+and record memory_analysis (fits in HBM?), cost_analysis (FLOPs / bytes for
+the roofline), and the per-collective operand bytes parsed from the
+partitioned HLO. Results land in benchmarks/results/dryrun_<mesh>.json —
+benchmarks/roofline.py turns them into EXPERIMENTS.md §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out benchmarks/results
+"""
+# (no `from __future__ import annotations` — the XLA_FLAGS lines above must
+# be the first statements in the module, which Python forbids combining with
+# __future__ imports.)
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import SHAPES, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+
+from repro.launch.hloparse import collective_summary, cost_summary
+
+
+def remat_duplication(hlo_text: str) -> Dict[str, int]:
+    """Count fusion ops as a cheap proxy for remat-inserted recompute."""
+    fusions = len(re.findall(r"\bfusion\(", hlo_text))
+    dots = len(re.findall(r"\b(?:dot|convolution)\(", hlo_text))
+    return {"fusions": fusions, "dots": dots}
+
+
+# ---------------------------------------------------------------------------
+def dryrun_cell(arch: str, shape_name: str, mesh,
+                verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    mesh_desc = dict(mesh.shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_desc,
+        "chips": mesh.devices.size,
+    }
+    if not ok:
+        rec["status"] = "skip"
+        rec["reason"] = why
+        return rec
+    t0 = time.monotonic()
+    spec = build_step(cfg, shape, mesh)
+    wrap = lambda s: jax.tree_util.tree_map(
+        lambda x: jax.sharding.NamedSharding(mesh, x), s)
+    with mesh:
+        lowered = jax.jit(spec.fn, in_shardings=wrap(spec.in_shardings),
+                          out_shardings=wrap(spec.out_shardings),
+                          donate_argnums=spec.donate).lower(*spec.args)
+        t1 = time.monotonic()
+        compiled = lowered.compile()
+        t2 = time.monotonic()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_summary(hlo).as_dict()
+    # loop-aware flops/traffic (XLA's cost_analysis counts while bodies once;
+    # see hloparse.cost_summary) — raw XLA numbers kept for reference
+    ours = cost_summary(hlo)
+    rec.update({
+        "status": "ok",
+        "program": spec.name,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "flops_per_device": ours.flops,
+        "bytes_per_device": ours.traffic_bytes,
+        "xla_flops_loop_blind": cost.get("flops", 0.0),
+        "xla_bytes_loop_blind": cost.get("bytes accessed", 0.0),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes":
+                getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+        "collectives": coll,
+        "hlo_ops": remat_duplication(hlo),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    })
+    if verbose:
+        arg_gb = rec["memory"]["argument_bytes"] / 2**30
+        tmp_gb = rec["memory"]["temp_bytes"] / 2**30
+        print(f"  {arch:22s} {shape_name:12s} {spec.name:13s} "
+              f"lower {rec['lower_s']:6.1f}s compile {rec['compile_s']:6.1f}s "
+              f"args {arg_gb:7.2f} GiB tmp {tmp_gb:7.2f} GiB "
+              f"coll {coll['wire_bytes_per_device']/2**30:9.3f} GiB",
+              flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=DOC)
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="dir for JSON results")
+    ap.add_argument("--print-analysis", action="store_true",
+                    help="print full memory_analysis()/cost_analysis()")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        tag = "multi" if multi else "single"
+        print(f"== mesh {dict(mesh.shape)} ({mesh.devices.size} chips) ==",
+              flush=True)
+        records = []
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    rec = dryrun_cell(arch, shape, mesh)
+                except Exception as e:
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": dict(mesh.shape), "status": "fail",
+                           "error": f"{type(e).__name__}: {e}"}
+                    failures.append((arch, shape, tag))
+                records.append(rec)
+                if args.print_analysis and rec.get("status") == "ok":
+                    print(json.dumps(rec, indent=2, default=str))
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            path = os.path.join(args.out, f"dryrun_{tag}.json")
+            # merge with existing (per-cell reruns update in place)
+            merged: Dict[str, Any] = {}
+            if os.path.exists(path):
+                with open(path) as f:
+                    for r in json.load(f):
+                        merged[(r["arch"], r["shape"])] = r
+            for r in records:
+                merged[(r["arch"], r["shape"])] = r
+            with open(path, "w") as f:
+                json.dump(list(merged.values()), f, indent=1, default=str)
+            print(f"-> {path}", flush=True)
+    if failures:
+        print(f"FAILED cells: {failures}", file=sys.stderr)
+        return 1
+    print("all dry-run cells passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

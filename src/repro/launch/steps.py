@@ -1,0 +1,138 @@
+"""Unified step builder: one entry point for every (arch × shape) cell.
+
+``build_step(cfg, shape, mesh)`` returns a :class:`StepSpec` — the function,
+its in/out PartitionSpecs, and abstract (ShapeDtypeStruct) arguments — for
+whichever program the shape's kind requires:
+
+  train    train_step(params, opt, batch, step)
+  prefill  prefill_step(params, batch)            (inference-prefill)
+  decode   serve_step(params, token, cache, pos)  (one new token against a
+                                                   seq_len-sized KV cache)
+
+The dry-run lowers/compiles these; the compile-cache warmer (paper T4)
+prepositions them; benchmarks read their cost analysis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, shape_applicable
+from repro.models import abstract_params, decode_step, init_cache, prefill
+from repro.optim import adamw_init
+from repro.parallel import (batch_specs, cache_specs, make_plan, param_specs,
+                            token_spec)
+from repro.parallel.ctx import sharding_ctx
+from repro.train.step import make_train_step, shaped_batch
+
+
+@dataclass
+class StepSpec:
+    name: str                       # train_step | prefill_step | serve_step
+    fn: Callable
+    in_shardings: Any
+    out_shardings: Any
+    args: Tuple[Any, ...]           # abstract ShapeDtypeStructs
+    donate: Tuple[int, ...] = ()
+
+
+def _abstract(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell (the
+    shardable, weak-type-correct, no-allocation pattern)."""
+    if shape.kind in ("train", "prefill"):
+        return shaped_batch(cfg, shape)
+    B = shape.global_batch
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, shape.seq_len))
+    return {"token": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "cache": cache,
+            "cache_len": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def build_step(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> StepSpec:
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} × {shape.name}: {why}")
+    if shape.kind == "train":
+        return _build_train(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return _build_prefill(cfg, shape, mesh)
+    return _build_decode(cfg, shape, mesh)
+
+
+# --------------------------------------------------------------------------
+def _build_train(cfg, shape, mesh) -> StepSpec:
+    fn, in_sh, out_sh = make_train_step(cfg, mesh)
+    params = abstract_params(cfg)
+    opt = jax.eval_shape(lambda: adamw_init(params, cfg.opt_state_dtype))
+    batch = shaped_batch(cfg, shape)
+    args = (params, opt, batch, jax.ShapeDtypeStruct((), jnp.int32))
+    return StepSpec("train_step", fn, in_sh, out_sh, args, donate=(0, 1))
+
+
+def _build_prefill(cfg, shape, mesh) -> StepSpec:
+    plan = make_plan(cfg, mesh)
+    psp = param_specs(cfg, mesh, plan)
+    bsp = batch_specs(cfg, mesh, shape.kind, plan, batch=shape.global_batch)
+    bsp = {k: v for k, v in bsp.items() if k != "labels"}
+    csp = cache_specs(cfg, mesh, plan, batch=shape.global_batch,
+                      seq_len=shape.seq_len)
+    B = shape.global_batch
+
+    def prefill_step(params, batch):
+        with sharding_ctx(mesh, plan):
+            kwargs = {k: v for k, v in batch.items() if k != "tokens"}
+            logits, cache = prefill(params, cfg, batch["tokens"], **kwargs)
+            return logits, cache
+
+    batch = {k: v for k, v in shaped_batch(cfg, shape).items()
+             if k != "labels"}
+    # out cache spec: prefill allocates T+pad slots (non-rolling) — re-derive
+    cache_out = jax.eval_shape(
+        lambda p, b: prefill_step(p, b), abstract_params(cfg), batch)[1]
+    csp_out = _respec_like(csp, cache_out)
+    out_sh = (P(_first(bsp["tokens"]), None), csp_out)
+    return StepSpec("prefill_step", prefill_step, (psp, bsp), out_sh,
+                    (abstract_params(cfg), batch))
+
+
+def _build_decode(cfg, shape, mesh) -> StepSpec:
+    plan = make_plan(cfg, mesh)
+    psp = param_specs(cfg, mesh, plan)
+    B, S = shape.global_batch, shape.seq_len
+    csp = cache_specs(cfg, mesh, plan, batch=B, seq_len=S)
+    tsp = token_spec(B, mesh, plan)
+
+    def serve_step(params, token, cache, cache_len):
+        with sharding_ctx(mesh, plan):
+            return decode_step(params, cfg, token, cache, cache_len)
+
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    args = (abstract_params(cfg), jax.ShapeDtypeStruct((B,), jnp.int32),
+            cache, jax.ShapeDtypeStruct((), jnp.int32))
+    in_sh = (psp, tsp, csp, P())
+    out_sh = (P(_first(tsp), None), csp)
+    return StepSpec("serve_step", serve_step, in_sh, out_sh, args,
+                    donate=(2,))
+
+
+def _first(spec: P):
+    return spec[0] if len(spec) else None
+
+
+def _respec_like(spec_tree, shape_tree):
+    """Prefill's output cache has the same structure as init_cache's — map
+    the cache specs onto it leaf-for-leaf."""
+    flat_specs = jax.tree_util.tree_flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))[0]
+    leaves, treedef = jax.tree_util.tree_flatten(shape_tree)
+    assert len(flat_specs) == len(leaves), (len(flat_specs), len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, flat_specs)

@@ -1,0 +1,63 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --steps 100 [--reduced] [--ckpt-dir /tmp/ckpt] [--resume]
+
+On this CPU container use --reduced (the smoke config); on a real pod the
+full config shards over the production mesh. The Trainer provides async
+checkpointing, preemption handling (SIGTERM -> checkpoint -> exit),
+bounded step retry, and elastic resume (see repro.train.trainer).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import make_batch_fn
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU smoke config (default on 1 device)")
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data", default=None, help="packed .bin corpus path")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    n_dev = len(jax.devices())
+    if args.reduced or n_dev == 1:
+        cfg = cfg.reduced()
+        mesh = make_host_mesh(1, 1)
+        seq = args.seq or 64
+        batch = args.batch or 8
+    else:
+        mesh = make_production_mesh()
+        seq = args.seq or cfg.max_seq
+        batch = args.batch or 256
+    shape = ShapeConfig("cli", seq, batch, "train")
+    print(f"arch={cfg.name} mesh={dict(mesh.shape)} seq={seq} batch={batch}")
+
+    batch_fn = make_batch_fn(cfg, shape, corpus=args.data)
+    tc = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                       peak_lr=args.lr, total_steps=args.steps)
+    trainer = Trainer(cfg, mesh, batch_fn, tc)
+    out = trainer.run(args.steps)
+    print(f"done at step {out['step']}; last loss {out['losses'][-1]:.4f}"
+          f"{' (preempted)' if out['preempted'] else ''}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model zoo: functional JAX implementations of all assigned architectures."""
+from .model import (abstract_params, decode_step, forward_hidden,
+                    forward_loss, init_cache, init_params, lm_logits,
+                    param_count, pattern_stages, prefill)
+
+__all__ = [
+    "abstract_params", "decode_step", "forward_hidden", "forward_loss",
+    "init_cache", "init_params", "lm_logits", "param_count",
+    "pattern_stages", "prefill",
+]

@@ -1,0 +1,150 @@
+"""Shared primitives: norms, rotary embeddings, activations, init helpers.
+
+Everything is functional: params are nested dicts of jnp arrays; apply
+functions are pure. Matmuls accumulate in fp32 via preferred_element_type.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), F32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), F32) * 0.02).astype(dtype)
+
+
+def zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def matmul(x, w, out_dtype=None):
+    """bf16 matmul with fp32 accumulation."""
+    y = jnp.matmul(x, w, preferred_element_type=F32)
+    return y.astype(out_dtype if out_dtype is not None else x.dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def rms_norm(x, gain, eps: float = 1e-6):
+    h = x.astype(F32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + eps)
+    return (h * gain.astype(F32)).astype(x.dtype)
+
+
+def layer_norm(x, gain, bias, eps: float = 1e-5):
+    h = x.astype(F32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.var(h, axis=-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + eps)
+    return (h * gain.astype(F32) + bias.astype(F32)).astype(x.dtype)
+
+
+def group_norm_heads(x, gain, eps: float = 1e-6):
+    """Per-head group norm over the feature dim. x: [..., H, hd]."""
+    h = x.astype(F32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.var(h, axis=-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + eps)
+    return (h * gain.astype(F32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# activations
+# --------------------------------------------------------------------------
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "squared_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name}")
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE + sinusoidal absolute)
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=F32) / half))
+
+
+def apply_rope(x, pos, theta: float):
+    """x: [B, T, H, hd]; pos: [B, T] int32 -> rotated x."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                 # [half]
+    angles = pos.astype(F32)[..., None] * freqs            # [B, T, half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, pos3, theta: float, sections: Tuple[int, ...]):
+    """Qwen2-VL M-RoPE. x: [B, T, H, hd]; pos3: [3, B, T] (t, h, w) ids.
+
+    The half-dim frequency bands are split into ``sections`` (t/h/w); each
+    band takes its angle from the corresponding position axis.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)                 # [half]
+    # angles per axis: [3, B, T, half]
+    angles_all = pos3.astype(F32)[..., None] * freqs
+    parts = []
+    start = 0
+    for axis, sec in enumerate(sections):
+        parts.append(angles_all[axis, :, :, start:start + sec])
+        start += sec
+    angles = jnp.concatenate(parts, axis=-1)               # [B, T, half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, d: int):
+    """Whisper-style sinusoidal absolute embeddings [n_pos, d]."""
+    half = d // 2
+    log_timescale = math.log(10000.0) / max(half - 1, 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(half, dtype=F32))
+    scaled = jnp.arange(n_pos, dtype=F32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+# --------------------------------------------------------------------------
+# misc
+# --------------------------------------------------------------------------
+def param_count_tree(tree) -> int:
+    return int(sum(x.size for x in jax.tree_util.tree_leaves(tree)))
+
+
+def param_bytes_tree(tree) -> int:
+    return int(sum(x.size * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(tree)))

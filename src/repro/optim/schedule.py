@@ -1,0 +1,14 @@
+"""LR schedules (pure functions of the step scalar)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, *, peak_lr: float, warmup_steps: int,
+                  total_steps: int, min_ratio: float = 0.1):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = s / max(warmup_steps, 1)
+    prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(s < warmup_steps, warm, cos)

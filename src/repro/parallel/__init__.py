@@ -1,0 +1,5 @@
+from .sharding import (batch_specs, cache_specs, data_axes, model_axis,
+                       param_specs, token_spec, ShardingPlan, make_plan)
+
+__all__ = ["batch_specs", "cache_specs", "data_axes", "model_axis",
+           "param_specs", "token_spec", "ShardingPlan", "make_plan"]

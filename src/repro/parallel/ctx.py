@@ -1,0 +1,56 @@
+"""Sharding context: lets model internals apply with_sharding_constraint
+without threading mesh/plan through every call.
+
+Used for context-parallel attention (archs whose head count doesn't divide
+the TP axis) and sequence-parallel residual streams (nemotron-340b): the
+step builder installs the context, attention/run_stage consult it.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def current():
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh, plan):
+    prev = current()
+    _STATE.ctx = (mesh, plan)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint(x, P(*spec)) if a context is installed."""
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def plan_or_none():
+    ctx = current()
+    return ctx[1] if ctx else None
+
+
+def mesh_or_none():
+    ctx = current()
+    return ctx[0] if ctx else None
+
+
+def dp_axes_or_none():
+    ctx = current()
+    return ctx[1].dp if ctx else None

@@ -1,0 +1,165 @@
+"""Serving runtime: continuous batching over a fixed slot pool.
+
+One jitted decode program serves B slots; requests stream in/out of slots:
+  submit()  — queue a prompt
+  tick()    — admit queued requests into free slots (per-request prefill,
+              cache scatter at the slot index), then one batched decode
+              step for every active slot; finished sequences free slots.
+
+Per-slot cache lengths (vectorized cache_len) make heterogeneous prompt
+lengths exact, not padded-approximate. Prompt lengths are bucketed to
+powers of two so prefill compiles O(log max_len) variants (the compile
+cache is prepositioned by repro.core.preposition — the paper's T4).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import decode_step, init_cache, prefill
+
+
+def make_prefill_fn(cfg: ArchConfig):
+    @jax.jit
+    def fn(params, tokens):
+        return prefill(params, cfg, tokens)
+    return fn
+
+
+def make_decode_fn(cfg: ArchConfig):
+    @jax.jit
+    def fn(params, token, cache, cache_len):
+        return decode_step(params, cfg, token, cache, cache_len)
+    return fn
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int = 32
+    eos: int = -1
+    tokens: List[int] = field(default_factory=list)
+    submitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+    done_at: Optional[float] = None
+
+
+def _bucket(n: int) -> int:
+    return 1 << max(4, math.ceil(math.log2(max(n, 1))))
+
+
+def _insert_slot(cache, slot_cache, idx: int):
+    """Scatter a single-request cache (B=1) into slot ``idx`` of the batched
+    cache. Every leaf has batch at dim 1 ([L, B, ...]) by construction."""
+    def ins(big, one):
+        return jax.lax.dynamic_update_slice_in_dim(big, one.astype(big.dtype),
+                                                   idx, axis=1)
+    return jax.tree_util.tree_map(ins, cache, slot_cache)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, slots: int = 8,
+                 max_seq: int = 2048, greedy: bool = True, seed: int = 0):
+        self.cfg, self.params = cfg, params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+        self.cache = init_cache(cfg, slots, max_seq)
+        self.cache_len = np.zeros((slots,), np.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self.done: Dict[int, Request] = {}
+        self.next_token = np.zeros((slots,), np.int32)
+        self._rid = 0
+        self._decode = make_decode_fn(cfg)
+        self._prefills: Dict[int, Any] = {}   # per-bucket jitted prefill
+        self.stats = {"decode_steps": 0, "prefills": 0}
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new: int = 32, eos: int = -1) -> int:
+        rid = self._rid
+        self._rid += 1
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                  max_new, eos, submitted_at=time.monotonic()))
+        return rid
+
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefills:
+            cfg = self.cfg
+
+            @jax.jit
+            def fn(params, tokens):
+                return prefill(params, cfg, tokens,
+                               pad=self.max_seq - tokens.shape[1])
+            self._prefills[bucket] = fn
+        return self._prefills[bucket]
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            L = len(req.prompt)
+            # exact-length prefill: one compiled program per distinct prompt
+            # length; the compile cache is prepositioned ahead of the
+            # interactive session (repro.core.preposition, paper T4).
+            toks = req.prompt[None, :]
+            logits, c1 = self._prefill_fn(L)(self.params, jnp.asarray(toks))
+            nxt = int(jnp.argmax(logits[0]))
+            req.tokens.append(nxt)
+            req.first_token_at = time.monotonic()
+            self.stats["prefills"] += 1
+            if nxt == req.eos or len(req.tokens) >= req.max_new:
+                # finished at the first token: never occupies a slot
+                req.done_at = time.monotonic()
+                self.done[req.rid] = req
+                continue
+            self.cache = _insert_slot(self.cache, c1, slot)
+            self.active[slot] = req
+            self.cache_len[slot] = L
+            self.next_token[slot] = nxt
+
+    # ------------------------------------------------------------------
+    def tick(self):
+        """Admit + one decode step across all active slots."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return False
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(self.next_token), self.cache,
+            jnp.asarray(self.cache_len))
+        self.stats["decode_steps"] += 1
+        if self.greedy:
+            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        else:
+            self.key, sub = jax.random.split(self.key)
+            nxt = np.asarray(jax.random.categorical(sub, logits), np.int32)
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.cache_len[slot] += 1
+            tok = int(nxt[slot])
+            req.tokens.append(tok)
+            self.next_token[slot] = tok
+            if tok == req.eos or len(req.tokens) >= req.max_new:
+                req.done_at = time.monotonic()
+                self.done[req.rid] = req
+                self.active[slot] = None
+                self.cache_len[slot] = 0
+        return True
+
+    def run(self, max_ticks: int = 10_000):
+        while (self.queue or any(r is not None for r in self.active)) \
+                and max_ticks > 0:
+            self.tick()
+            max_ticks -= 1
+        return self.done

@@ -1,0 +1,4 @@
+from .step import make_train_step, init_train_state
+from .trainer import Trainer, TrainerConfig
+
+__all__ = ["make_train_step", "init_train_state", "Trainer", "TrainerConfig"]

@@ -1,0 +1,58 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches run
+on the single real CPU device; only launch/dryrun.py (its own process)
+forces 512 placeholder devices."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def reduced(arch_id: str, **overrides):
+    cfg = get_config(arch_id).reduced()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+@pytest.fixture(params=ARCH_IDS)
+def arch_id(request):
+    return request.param
+
+
+def tiny_batch(cfg, B=2, T=16, seed=0):
+    """Concrete batch for a reduced cfg, covering modality extras."""
+    import jax.numpy as jnp
+    r = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(r.integers(0, cfg.vocab_size, (B, T)),
+                              jnp.int32),
+        "labels": jnp.asarray(r.integers(0, cfg.vocab_size, (B, T)),
+                              jnp.int32),
+    }
+    if cfg.enc_dec:
+        batch["frames"] = jnp.asarray(
+            r.normal(size=(B, cfg.enc_len, cfg.d_model)) * 0.02, jnp.bfloat16)
+    if cfg.mrope_sections:
+        npatch = 4
+        pos = np.broadcast_to(np.arange(T, dtype=np.int32), (B, T))
+        batch["pos3"] = jnp.asarray(np.stack([pos] * 3), jnp.int32)
+        batch["patch_embeds"] = jnp.asarray(
+            r.normal(size=(B, npatch, cfg.d_model)) * 0.02, jnp.bfloat16)
+        batch["patch_pos"] = jnp.asarray(
+            np.broadcast_to(np.arange(npatch, dtype=np.int32), (B, npatch)))
+    return batch

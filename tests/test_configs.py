@@ -1,0 +1,139 @@
+"""Assigned-architecture configs: exact dims + analytic-vs-actual params."""
+from __future__ import annotations
+
+import pytest
+
+from repro.configs import ARCH_IDS, all_configs, get_config
+from repro.configs.base import SHAPES, shape_applicable
+from repro.models import abstract_params, param_count
+
+
+EXPECT = {
+    # (layers, d_model, heads, kv_heads, d_ff, vocab)
+    "qwen3_14b":          (40, 5120, 40, 8, 17408, 151936),
+    "nemotron_4_340b":    (96, 18432, 96, 8, 73728, 256000),
+    "qwen3_0_6b":         (28, 1024, 16, 8, 3072, 151936),
+    "qwen2_1_5b":         (28, 1536, 12, 2, 8960, 151936),
+    "xlstm_1_3b":         (48, 2048, 4, 4, 0, 50304),
+    "zamba2_2_7b":        (54, 2560, 32, 32, 10240, 32000),
+    "mixtral_8x22b":      (56, 6144, 48, 8, 16384, 32768),
+    "moonshot_v1_16b_a3b": (48, 2048, 16, 16, 1408, 163840),
+    "qwen2_vl_7b":        (28, 3584, 28, 4, 18944, 152064),
+    "whisper_small":      (12, 768, 12, 12, 3072, 51865),
+}
+
+# headline parameter counts. Bands follow from the ASSIGNMENT's dims (which
+# are authoritative), not the nameplate, where the two disagree:
+#  - xlstm_1_3b: the assignment's 48L x d2048 with ssm_expand=2 and explicit
+#    q/k/v projections lands at 3.0B; the paper's exact 1.3B projection
+#    layout is not public ([arXiv:2405.04517; unverified] tier).
+#  - moonshot_v1_16b_a3b: the assignment's 48L x 64 experts x d_ff 1408 is
+#    26.5B of expert weights alone (the hf 16B model uses 27 layers); the
+#    ACTIVE count (~4B) matches the "a3b" nameplate to within formulation.
+PARAM_BAND = {
+    "qwen3_14b":          (12e9, 17e9),
+    "nemotron_4_340b":    (280e9, 400e9),
+    "qwen3_0_6b":         (0.5e9, 0.9e9),
+    "qwen2_1_5b":         (1.2e9, 2.0e9),
+    "xlstm_1_3b":         (1.0e9, 3.3e9),
+    "zamba2_2_7b":        (2.2e9, 3.3e9),
+    "mixtral_8x22b":      (115e9, 160e9),
+    "moonshot_v1_16b_a3b": (13e9, 30e9),
+    "qwen2_vl_7b":        (6e9, 9e9),
+    "whisper_small":      (0.2e9, 0.35e9),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_assignment_dims(arch):
+    cfg = get_config(arch)
+    L, d, H, KV, ff, V = EXPECT[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == KV
+    assert cfg.d_ff == ff or (cfg.family == "moe"
+                              and cfg.d_ff_expert == ff) or ff == 0
+    assert cfg.vocab_size == V
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_in_band(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    lo, hi = PARAM_BAND[arch]
+    assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]B"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_analytic_matches_abstract_tree(arch):
+    """cfg.param_count() (used for roofline MODEL_FLOPS) must track the real
+    parameter tree within 2%."""
+    cfg = get_config(arch)
+    analytic = cfg.param_count()
+    actual = param_count(cfg)
+    assert abs(analytic - actual) / actual < 0.02, (analytic, actual)
+
+
+def test_moe_active_params():
+    mix = get_config("mixtral_8x22b")
+    assert mix.active_param_count() < mix.param_count() / 2
+    moon = get_config("moonshot_v1_16b_a3b")
+    # "16b-a3b": ~16B total, ~3B active
+    assert 2e9 <= moon.active_param_count() <= 4.5e9
+    dense = get_config("qwen3_14b")
+    assert dense.active_param_count() == dense.param_count()
+
+
+def test_arch_specifics():
+    q3 = get_config("qwen3_14b")
+    assert q3.qk_norm and not q3.qkv_bias
+    q2 = get_config("qwen2_1_5b")
+    assert q2.qkv_bias and not q2.qk_norm
+    nem = get_config("nemotron_4_340b")
+    assert nem.activation == "squared_relu" and not nem.gated_mlp
+    mix = get_config("mixtral_8x22b")
+    assert mix.n_experts == 8 and mix.top_k == 2 and mix.sliding_window == 4096
+    moon = get_config("moonshot_v1_16b_a3b")
+    assert moon.n_experts == 64 and moon.top_k == 6
+    vl = get_config("qwen2_vl_7b")
+    assert sum(vl.mrope_sections) == vl.head_dim // 2
+    wh = get_config("whisper_small")
+    assert wh.enc_dec and wh.rope_theta == 0
+    zam = get_config("zamba2_2_7b")
+    assert zam.ssm_state == 64 and zam.shared_attn_every > 0
+    xl = get_config("xlstm_1_3b")
+    assert xl.xlstm_slstm_every > 0
+
+
+def test_long_500k_skip_rule():
+    long = SHAPES["long_500k"]
+    runs = {a for a in ARCH_IDS
+            if shape_applicable(get_config(a), long)[0]}
+    assert runs == {"xlstm_1_3b", "zamba2_2_7b", "mixtral_8x22b"}
+    for a in ARCH_IDS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            ok, _ = shape_applicable(get_config(a), SHAPES[s])
+            assert ok
+
+
+def test_dashed_aliases():
+    assert get_config("qwen3-14b") is get_config("qwen3_14b")
+    assert get_config("moonshot-v1-16b-a3b").name == "moonshot-v1-16b-a3b"
+    assert get_config("qwen3-0.6b") is get_config("qwen3_0_6b")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_is_small(arch):
+    r = get_config(arch).reduced()
+    assert r.d_model <= 128 and r.vocab_size <= 256
+    assert param_count(r) < 5e6
+    assert len(r.block_pattern) == r.n_layers
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].kind == "train"
+    assert SHAPES["prefill_32k"].kind == "prefill"
+    assert SHAPES["decode_32k"].kind == "decode"
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1

@@ -1,0 +1,108 @@
+"""Discrete-event engine invariants (unit + hypothesis property tests)."""
+from __future__ import annotations
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.events import Resource, Sim
+
+
+def test_sim_ordering():
+    sim = Sim()
+    order = []
+    sim.schedule(2.0, lambda: order.append("b"))
+    sim.schedule(1.0, lambda: order.append("a"))
+    sim.schedule(3.0, lambda: order.append("c"))
+    sim.run()
+    assert order == ["a", "b", "c"]
+    assert sim.now == 3.0
+
+
+def test_sim_ties_fifo():
+    sim = Sim()
+    order = []
+    for i in range(10):
+        sim.schedule(1.0, lambda i=i: order.append(i))
+    sim.run()
+    assert order == list(range(10))
+
+
+def test_sim_nested_schedule():
+    sim = Sim()
+    seen = []
+
+    def outer():
+        seen.append(("outer", sim.now))
+        sim.schedule(0.5, lambda: seen.append(("inner", sim.now)))
+
+    sim.schedule(1.0, outer)
+    sim.run()
+    assert seen == [("outer", 1.0), ("inner", 1.5)]
+
+
+def test_sim_run_until():
+    sim = Sim()
+    sim.schedule(5.0, lambda: None)
+    t = sim.run(until=2.0)
+    assert t == 2.0
+    t = sim.run()
+    assert t == 5.0
+
+
+def test_sim_at_past_clamps():
+    sim = Sim()
+    sim.schedule(1.0, lambda: sim.at(0.5, lambda: None))  # in the past
+    sim.run()
+    assert sim.now == 1.0
+
+
+def test_resource_serial_service():
+    sim = Sim()
+    r = Resource(sim, rate=10.0)          # 10 items/s
+    assert r.request(10) == 1.0           # first batch: 1s
+    assert r.request(10) == 2.0           # queues behind the first
+    assert r.served == 20
+
+
+def test_resource_latency_pipelined():
+    sim = Sim()
+    r = Resource(sim, rate=10.0, latency=0.5)
+    t1 = r.request(10)
+    t2 = r.request(10)
+    # latency adds to completion but not to server occupancy
+    assert t1 == 1.5
+    assert t2 == 2.5
+
+
+def test_resource_idle_restart():
+    sim = Sim()
+    r = Resource(sim, rate=1.0)
+    r.request(1)
+    sim.schedule(10.0, lambda: None)
+    sim.run()
+    assert r.request(1) == 11.0           # starts at now, not at _free_at
+
+
+@given(st.lists(st.floats(min_value=0.01, max_value=1e4), min_size=1,
+                max_size=50),
+       st.floats(min_value=0.1, max_value=1e5))
+@settings(max_examples=100, deadline=None)
+def test_resource_conservation(items, rate):
+    """Completion of the last request == total_items/rate (work conserving),
+    and completion times are monotone in request order."""
+    sim = Sim()
+    r = Resource(sim, rate=rate)
+    times = [r.request(n) for n in items]
+    assert all(t2 >= t1 for t1, t2 in zip(times, times[1:]))
+    expect = sum(items) / rate
+    assert abs(times[-1] - expect) < 1e-6 * max(1.0, expect)
+
+
+@given(st.integers(min_value=1, max_value=200))
+@settings(max_examples=50, deadline=None)
+def test_resource_eta_matches_request(n):
+    sim = Sim()
+    r = Resource(sim, rate=7.0, latency=0.1)
+    eta = r.eta(n)
+    got = r.request(n)
+    assert abs(eta - got) < 1e-12

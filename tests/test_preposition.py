@@ -1,0 +1,174 @@
+"""Prepositioning (paper T4, TPU form) + sweep supervisor (T1/T3 analogue)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.core.preposition import (CompileCacheWarmer, WeightPrepositioner,
+                                    cache_key)
+from repro.core.supervisor import (ChipQuota, SweepSupervisor,
+                                   carve_submeshes)
+from repro.launch.mesh import make_host_mesh
+
+
+def tiny_cfg():
+    return dataclasses.replace(
+        get_config("qwen3_0_6b").reduced(),
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=64, block_pattern=(), remat="none")
+
+
+def build_for(cfg, mesh):
+    """build() for the warmer: a miniature train-ish step."""
+    from jax.sharding import PartitionSpec as P
+    from repro.models import abstract_params, forward_loss
+    from repro.parallel import param_specs
+    from repro.train.step import shaped_batch
+
+    shape = SHAPES["train_4k"]
+    psp = param_specs(cfg, mesh)
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((4, 16), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((4, 16), jnp.int32),
+    }
+    bsp = {"tokens": P(), "labels": P()}
+
+    def fn(params, b):
+        loss, _ = forward_loss(params, cfg, b)
+        return loss
+
+    return fn, (psp, bsp), P(), (abstract_params(cfg), batch)
+
+
+def test_warm_then_get_no_compile():
+    cfg = tiny_cfg()
+    mesh = make_host_mesh(1, 1)
+    w = CompileCacheWarmer()
+    shape = SHAPES["train_4k"]
+    entry = w.warm(cfg, shape, mesh, lambda: build_for(cfg, mesh))
+    assert entry.compile_s >= 0
+    assert w.stats["warms"] == 1
+    t0 = time.monotonic()
+    got = w.get(cfg, shape, mesh)
+    dt = time.monotonic() - t0
+    assert got is entry
+    assert dt < 0.01                       # cache hit: no compile
+    assert w.stats["hits"] == 1
+
+
+def test_warm_idempotent():
+    cfg = tiny_cfg()
+    mesh = make_host_mesh(1, 1)
+    w = CompileCacheWarmer()
+    shape = SHAPES["train_4k"]
+    e1 = w.warm(cfg, shape, mesh, lambda: build_for(cfg, mesh))
+    e2 = w.warm(cfg, shape, mesh, lambda: build_for(cfg, mesh))
+    assert e1 is e2
+    assert w.stats["warms"] == 1
+
+
+def test_cold_get_raises():
+    """A compile inside the interactive loop is the failure mode the paper
+    engineered away — get() on a cold cache must raise, not compile."""
+    w = CompileCacheWarmer()
+    cfg = tiny_cfg()
+    with pytest.raises(KeyError):
+        w.get(cfg, SHAPES["train_4k"], make_host_mesh(1, 1))
+    assert w.stats["misses"] == 1
+
+
+def test_cache_key_distinguishes_cells():
+    cfg = tiny_cfg()
+    mesh = make_host_mesh(1, 1)
+    k1 = cache_key(cfg, SHAPES["train_4k"], mesh)
+    k2 = cache_key(cfg, SHAPES["prefill_32k"], mesh)
+    k3 = cache_key(dataclasses.replace(cfg, name="other"),
+                   SHAPES["train_4k"], mesh)
+    assert len({k1, k2, k3}) == 3
+
+
+def test_weight_prepositioner():
+    wp = WeightPrepositioner()
+    cfg = tiny_cfg()
+    mesh = make_host_mesh(1, 1)
+    calls = {"n": 0}
+
+    def init():
+        calls["n"] += 1
+        return {"w": jnp.ones((4,))}
+
+    t1 = wp.preposition(cfg, mesh, 0, init)
+    t2 = wp.preposition(cfg, mesh, 0, init)
+    assert t1 is t2 and calls["n"] == 1
+    assert wp.get(cfg, mesh, 0) is t1
+    with pytest.raises(KeyError):
+        wp.get(cfg, mesh, 1)
+
+
+# --------------------------------------------------------------------------
+# sweep supervisor
+# --------------------------------------------------------------------------
+def test_chip_quota():
+    q = ChipQuota(max_chips=8)
+    assert q.try_acquire(8)
+    assert not q.try_acquire(1)
+    q.release(4)
+    assert q.try_acquire(4)
+
+
+def test_carve_submeshes():
+    devs = np.asarray(jax.devices() * 8).reshape(8, 1)
+    subs = carve_submeshes(devs, 4)
+    assert len(subs) == 4
+    assert all(m.devices.shape == (2, 1) for m in subs)
+    assert all(m.axis_names == ("data", "model") for m in subs)
+    with pytest.raises(AssertionError):
+        carve_submeshes(devs, 3)
+
+
+def test_sweep_interactive_launch_no_compiles():
+    """The paper's workflow: preposition, then N launches in milliseconds."""
+    cfg = tiny_cfg()
+    mesh = make_host_mesh(1, 1)
+    sup = SweepSupervisor(max_chips=4)
+    shape = SHAPES["train_4k"]
+    sup.preposition(cfg, shape, mesh, lambda: build_for(cfg, mesh))
+
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+
+    from repro.models import init_params
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    def run_member(entry, member):
+        loss = entry.compiled(params, batch)
+        return float(loss)
+
+    grid = [{"lr": lr} for lr in (1e-4, 3e-4, 1e-3, 3e-3)]
+    members = sup.launch_sweep(cfg, shape, mesh, grid, run_member)
+    assert len(members) == 4
+    assert all(m.state == "running" for m in members)
+    assert all(m.launch_time is not None and m.launch_time < 1.0
+               for m in members)
+    assert sup.warmer.stats["warms"] == 1          # zero compiles in the loop
+    assert sup.warmer.stats["hits"] == 4
+    rep = sup.launch_report()
+    assert rep["n"] == 4 and rep["rate_per_s"] > 1
+
+
+def test_sweep_quota_holds_over_limit():
+    cfg = tiny_cfg()
+    mesh = make_host_mesh(1, 1)                    # 1 chip per member
+    sup = SweepSupervisor(max_chips=0)             # nothing allowed
+    shape = SHAPES["train_4k"]
+    sup.preposition(cfg, shape, mesh, lambda: build_for(cfg, mesh))
+    members = sup.launch_sweep(cfg, shape, mesh, [{}], lambda e, m: None)
+    assert members[0].state == "held"

@@ -1,0 +1,28 @@
+"""Real-process launch harness: the §III topologies with actual OS forks."""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.realproc import compare, flat_launch, two_tier_launch
+
+
+def test_flat_launch_completes():
+    r = flat_launch(2, 3)
+    assert r.total_procs == 6
+    assert r.launch_time > 0
+    assert r.strategy == "flat"
+
+
+def test_two_tier_launch_completes():
+    r = two_tier_launch(2, 3)
+    assert r.total_procs == 6
+    assert r.launch_time > 0
+    assert r.strategy == "two-tier"
+
+
+def test_compare_returns_both():
+    flat, twot = compare(2, 4)
+    assert flat.total_procs == twot.total_procs == 8
+    # on a 1-core container the parallelism win is noisy — only sanity-bound
+    # the ratio; the calibrated comparison lives in benchmarks/real_launch.
+    assert twot.launch_time < flat.launch_time * 5

@@ -1,0 +1,214 @@
+"""Scheduler (Slurm-analogue) behaviour + the paper's headline validations."""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.cluster import Cluster, ClusterSpec
+from repro.core.events import Sim
+from repro.core.scheduler import (AdmissionMode, JobState, Scheduler,
+                                  UserLimits, measure_launch)
+
+
+def small_sched(mode=AdmissionMode.ON_DEMAND, n_nodes=8, **kw):
+    sim = Sim()
+    cluster = Cluster(sim, ClusterSpec(n_nodes=n_nodes))
+    cluster.preposition("octave")
+    cluster.preposition("python")
+    return sim, cluster, Scheduler(sim, cluster, mode=mode, **kw)
+
+
+# --------------------------------------------------------------------------
+# paper headline claims (§IV) — the validation table in EXPERIMENTS.md
+# --------------------------------------------------------------------------
+def test_paper_claim_tf_32k_under_5s():
+    r = measure_launch("tensorflow", 512, 64)
+    assert r.total_procs == 32768
+    assert r.launch_time < 5.0
+
+
+def test_paper_claim_octave_32k_under_10s():
+    r = measure_launch("octave", 512, 64)
+    assert r.launch_time < 10.0
+
+
+def test_paper_claim_octave_262k_under_40s():
+    r = measure_launch("octave", 512, 512)
+    assert r.total_procs == 262144
+    assert r.launch_time < 40.0
+
+
+def test_paper_claim_sustained_rate_6000_per_s():
+    """Fig 7: launch-rate plateau ≈ 6000/s at scale."""
+    r = measure_launch("octave", 512, 256)
+    assert 4000 <= r.launch_rate <= 12000
+
+
+def test_paper_claim_naive_launch_30_60min():
+    r = measure_launch("matlab", 625, 64, strategy="flat",
+                       prepositioned=False)
+    assert 1800 <= r.launch_time <= 3600
+
+
+def test_fig6_shape_under_10s_except_largest():
+    """Fig 6: <10 s for all but the largest (nodes × procs) grid points."""
+    for n in (1, 8, 64):
+        for p in (1, 16, 64):
+            r = measure_launch("octave", n, p)
+            assert r.launch_time < 10.0, (n, p, r.launch_time)
+    big = measure_launch("octave", 512, 512)
+    assert big.launch_time > 10.0
+
+
+# --------------------------------------------------------------------------
+# admission modes (Figure 2 quadrant)
+# --------------------------------------------------------------------------
+def test_interactive_skips_queue_wait():
+    sim, cluster, sched = small_sched(AdmissionMode.ON_DEMAND)
+    job = sched.submit("u", "octave", 2, 4)
+    sched.run()
+    assert job.state == JobState.COMPLETED
+    assert job.queue_wait == 0.0          # immediate evaluation at submit
+
+
+def test_batch_mode_waits_for_cycle():
+    sim, cluster, sched = small_sched(AdmissionMode.BATCH, eval_period=2.0)
+    job = sched.submit("u", "octave", 2, 4, interactive=False)
+    sched.run()
+    assert job.state == JobState.COMPLETED
+    assert job.queue_wait >= 2.0          # one eval period minimum
+
+
+def test_on_demand_enforces_core_limit():
+    sim, cluster, sched = small_sched(
+        AdmissionMode.ON_DEMAND, n_nodes=8,
+        default_limits=UserLimits(max_cores=2 * 64))
+    j1 = sched.submit("u", "octave", 2, 4, work_seconds=100.0)
+    j2 = sched.submit("u", "octave", 2, 4, work_seconds=1.0)
+    sched.run(until=50.0)
+    assert j1.state == JobState.RUNNING
+    assert j2.state == JobState.PENDING    # over the 128-core limit
+    sched.run()                            # j1 finishes, j2 admitted
+    assert j2.state == JobState.COMPLETED
+
+
+def test_flood_mode_ignores_limits():
+    sim, cluster, sched = small_sched(
+        AdmissionMode.FLOOD, n_nodes=8,
+        default_limits=UserLimits(max_cores=64))
+    jobs = [sched.submit("u", "octave", 1, 4) for _ in range(8)]
+    sched.run()
+    assert all(j.state == JobState.COMPLETED for j in jobs)
+    # all 8 ran CONCURRENTLY despite a 1-node nominal limit
+    starts = [j.started_at for j in jobs]
+    assert max(starts) - min(starts) < 1.0
+
+
+def test_max_jobs_limit():
+    sim, cluster, sched = small_sched(
+        AdmissionMode.ON_DEMAND, n_nodes=8,
+        default_limits=UserLimits(max_jobs=2))
+    jobs = [sched.submit("u", "octave", 1, 2, work_seconds=10.0)
+            for _ in range(4)]
+    sched.run(until=5.0)
+    running = sum(1 for j in jobs if j.state == JobState.RUNNING)
+    assert running == 2
+    sched.run()
+    assert all(j.state == JobState.COMPLETED for j in jobs)
+
+
+def test_priority_order_and_interactive_over_batch():
+    sim, cluster, sched = small_sched(AdmissionMode.BATCH, n_nodes=1,
+                                      eval_period=1.0)
+    lo = sched.submit("u", "octave", 1, 1, priority=0, interactive=False,
+                      work_seconds=1.0)
+    hi = sched.submit("u", "octave", 1, 1, priority=5, interactive=False,
+                      work_seconds=1.0)
+    ia = sched.submit("u", "octave", 1, 1, priority=0, interactive=True,
+                      work_seconds=1.0)
+    sched.run()
+    # priority first; then interactive beats batch at equal priority
+    assert hi.started_at < ia.started_at < lo.started_at
+
+
+def test_eval_depth_bounds_queue_scan():
+    sim, cluster, sched = small_sched(AdmissionMode.BATCH, n_nodes=8,
+                                      eval_period=0.5, eval_depth=2)
+    jobs = [sched.submit("u", "octave", 1, 1, interactive=False)
+            for _ in range(6)]
+    sched.run()
+    assert all(j.state == JobState.COMPLETED for j in jobs)
+    # with depth=2 the 6 jobs need >= 3 scheduling cycles
+    assert sched.stats.sched_cycles >= 3
+
+
+def test_held_over_pending_limit():
+    sim, cluster, sched = small_sched(
+        AdmissionMode.ON_DEMAND, n_nodes=1,
+        default_limits=UserLimits(max_pending=2))
+    jobs = [sched.submit("u", "octave", 1, 1, work_seconds=5.0)
+            for _ in range(5)]
+    assert sched.stats.held >= 1
+
+
+# --------------------------------------------------------------------------
+# fault tolerance at the scheduler layer
+# --------------------------------------------------------------------------
+def test_node_failure_requeues_job():
+    sim, cluster, sched = small_sched(n_nodes=4)
+    job = sched.submit("u", "octave", 2, 4, work_seconds=100.0)
+    sched.run(until=10.0)
+    assert job.state == JobState.RUNNING
+    dead = job.nodes[0].id
+    victim = sched.fail_node(dead)
+    assert victim is job
+    assert job.requeues == 1
+    sched.run()
+    assert job.state == JobState.COMPLETED
+    assert all(nd.id != dead for nd in job.nodes)   # re-placed off the corpse
+    assert sched.stats.requeued == 1
+
+
+def test_fail_idle_node_no_requeue():
+    sim, cluster, sched = small_sched(n_nodes=4)
+    assert sched.fail_node(3) is None
+
+
+def test_straggler_redispatch():
+    sim, cluster, sched = small_sched(n_nodes=4, straggler_factor=3.0)
+    job = sched.submit("u", "octave", 4, 2, work_seconds=10.0)
+    sched.run()
+    assert job.state == JobState.COMPLETED
+    assert job.straggler_redispatches == 1
+    # detection at 1.5x median + re-run: finishes ~2.5x median, NOT 3x
+    dur = job.finished_at - job.started_at
+    assert dur < 3.0 * 10.0
+
+
+def test_cancel_pending_job():
+    sim, cluster, sched = small_sched(n_nodes=1)
+    j1 = sched.submit("u", "octave", 1, 1, work_seconds=50.0)
+    j2 = sched.submit("u", "octave", 1, 1)
+    sched.cancel(j2)
+    assert j2.state == JobState.CANCELLED
+    sched.run()
+    assert j1.state == JobState.COMPLETED
+
+
+def test_backfill_after_completion():
+    """Resources freed by completion immediately schedule queued work."""
+    sim, cluster, sched = small_sched(n_nodes=2)
+    j1 = sched.submit("u", "octave", 2, 2, work_seconds=5.0)
+    j2 = sched.submit("u", "octave", 2, 2, work_seconds=5.0)
+    sched.run()
+    assert j2.started_at >= j1.finished_at
+    assert j2.state == JobState.COMPLETED
+
+
+def test_stats_accounting():
+    sim, cluster, sched = small_sched(n_nodes=4)
+    for _ in range(3):
+        sched.submit("u", "octave", 1, 2)
+    sched.run()
+    assert sched.stats.dispatched == 3
+    assert sched.stats.completed == 3
+    assert sched.stats.failed == 0
