@@ -1,0 +1,11 @@
+# Repo entrypoints. `make test` is the tier-1 verify from ROADMAP.md.
+.PHONY: test test-deps bench-taskarray
+
+test:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q $(ARGS)
+
+test-deps:
+	python -m pip install -r requirements-test.txt
+
+bench-taskarray:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/bench_taskarray.py

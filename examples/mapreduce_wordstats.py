@@ -1,0 +1,112 @@
+"""LLMapReduce over synthetic text shards: the canonical 3-array DAG.
+
+    shards (map)  ->  counts (map)  ->  top (reduce)
+
+`shards` generates deterministic zipf-ish word shards, `counts` computes
+per-shard word histograms, `top` merges them and reports the top-k. The
+SAME graph runs on all three runners (payloads carry both fn and cmd):
+
+    PYTHONPATH=src python examples/mapreduce_wordstats.py --runner sim
+    PYTHONPATH=src python examples/mapreduce_wordstats.py --runner real
+    PYTHONPATH=src python examples/mapreduce_wordstats.py --runner inline
+
+--inject fails one count task (retried with backoff) and straggles
+another (re-dispatched once k x median elapses) — watch the summary lines.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.taskarray import (InlineRunner, RealRunner, RetryPolicy,
+                             SimRunner, TaskGraph)
+
+VOCAB = ["the", "of", "launch", "node", "core", "octave", "matlab",
+         "interactive", "scheduler", "cluster", "task", "array"]
+
+# fn and cmd encode IDENTICAL logic: fn for sim/inline, cmd for the real
+# worker pool (where payloads cross a process boundary as source text).
+SHARD_CMD = ("[params['vocab'][int(random.Random(params['seed'] * 31 + j)"
+             ".paretovariate(1.1)) % len(params['vocab'])]"
+             " for j in range(params['n_words'])]")
+
+COUNT_CMD = ("{w: inputs['shards'][params['i']].count(w)"
+             " for w in set(inputs['shards'][params['i']])}")
+
+TOP_CMD = ("sorted({w: sum(c.get(w, 0) for c in"
+           " inputs['counts'][params['lo']:params['hi']]) for w in"
+           " {k for c in inputs['counts'] for k in c}}.items(),"
+           " key=lambda kv: -kv[1])[:params['k']]")
+
+
+def shard_fn(params, inputs):
+    import random
+    vocab, n = params["vocab"], params["n_words"]
+    return [vocab[int(random.Random(params["seed"] * 31 + j)
+                      .paretovariate(1.1)) % len(vocab)]
+            for j in range(n)]
+
+
+def count_fn(params, inputs):
+    shard = inputs["shards"][params["i"]]
+    return {w: shard.count(w) for w in set(shard)}
+
+
+def top_fn(params, inputs):
+    merged = {}
+    for c in inputs["counts"][params["lo"]:params["hi"]]:
+        for w, n in c.items():
+            merged[w] = merged.get(w, 0) + n
+    return sorted(merged.items(), key=lambda kv: -kv[1])[:params["k"]]
+
+
+def build_graph(n_shards: int = 16, n_words: int = 200, k: int = 5,
+                inject: bool = False) -> TaskGraph:
+    g = TaskGraph("wordstats")
+    shards = g.map(shard_fn,
+                   [{"seed": s, "n_words": n_words, "vocab": VOCAB}
+                    for s in range(n_shards)],
+                   cmd=SHARD_CMD, name="shards", work_seconds=0.4)
+    counts = g.map(count_fn, [{"i": i} for i in range(n_shards)],
+                   cmd=COUNT_CMD, name="counts", deps=[shards],
+                   work_seconds=0.6)
+    g.reduce(top_fn, counts, cmd=TOP_CMD, name="top", work_seconds=1.0)
+    # reduce() slices cover everything; add k to the single reducer task
+    g.arrays[-1].tasks[0].params["k"] = k
+    if inject:
+        counts.tasks[1].fail_attempts = 1      # fails once, retried
+        counts.tasks[n_shards // 2].straggle_factor = 8.0   # slow node
+    return g
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runner", choices=("sim", "real", "inline"),
+                    default="sim")
+    ap.add_argument("--shards", type=int, default=16)
+    ap.add_argument("--words", type=int, default=200)
+    ap.add_argument("--top", type=int, default=5)
+    ap.add_argument("--inject", action="store_true",
+                    help="inject one task failure + one straggler")
+    args = ap.parse_args()
+
+    g = build_graph(args.shards, args.words, args.top, inject=args.inject)
+    policy = RetryPolicy(max_retries=2, backoff=0.1, straggler_k=3.0,
+                         scan_period=0.1)
+    if args.runner == "sim":
+        res = g.run(SimRunner(), policy)
+    elif args.runner == "real":
+        with RealRunner(n_launchers=2, workers_per_launcher=4) as rr:
+            res = rr.run_graph(g, policy)
+    else:
+        res = g.run(InlineRunner(), policy)
+
+    print(res.report())
+    top = res["top"].values[0]
+    print(f"top-{args.top} words over {args.shards} shards: "
+          + ", ".join(f"{w}={n}" for w, n in top))
+    if not res.all_ok:
+        raise SystemExit("some tasks failed permanently")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+#!/usr/bin/env sh
+# Tier-1 verify: one memorable invocation (see ROADMAP.md).
+#   scripts/test.sh            -> whole suite
+#   scripts/test.sh tests/x.py -> pass-through pytest args
+set -eu
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

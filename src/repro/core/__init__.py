@@ -6,21 +6,22 @@ check with real OS processes: realproc.
 """
 from .apps import PROFILES, AppProfile
 from .cluster import TX_GREEN, Cluster, ClusterSpec, Node, NodeSpec
-from .events import Resource, Sim
+from .events import Resource, Sim, Timer
 from .launcher import (STRATEGIES, FlatSchedulerLaunch, HierarchicalSshTree,
                        LaunchResult, TwoTierLauncher)
 from .preposition import CompileCacheWarmer, WeightPrepositioner, cache_key
-from .scheduler import (AdmissionMode, Job, JobState, Scheduler,
+from .scheduler import (AdmissionMode, ArrayJob, Job, JobState, Scheduler,
                         SchedulerStats, UserLimits, measure_launch)
 from .supervisor import (ChipQuota, SweepMember, SweepSupervisor,
                          carve_submeshes)
 
 __all__ = [
     "PROFILES", "AppProfile", "TX_GREEN", "Cluster", "ClusterSpec", "Node",
-    "NodeSpec", "Resource", "Sim", "STRATEGIES", "FlatSchedulerLaunch",
-    "HierarchicalSshTree", "LaunchResult", "TwoTierLauncher",
-    "CompileCacheWarmer", "WeightPrepositioner", "cache_key",
-    "AdmissionMode", "Job", "JobState", "Scheduler", "SchedulerStats",
+    "NodeSpec", "Resource", "Sim", "Timer", "STRATEGIES",
+    "FlatSchedulerLaunch", "HierarchicalSshTree", "LaunchResult",
+    "TwoTierLauncher", "CompileCacheWarmer", "WeightPrepositioner",
+    "cache_key", "AdmissionMode", "ArrayJob", "Job", "JobState",
+    "Scheduler", "SchedulerStats",
     "UserLimits", "measure_launch", "ChipQuota", "SweepMember",
     "SweepSupervisor", "carve_submeshes",
 ]

@@ -12,29 +12,64 @@ import itertools
 from typing import Callable, List, Optional, Tuple
 
 
+class Timer:
+    """Cancellable handle for a scheduled callback (returned by Sim.schedule).
+
+    Cancellation marks the entry dead in place; the heap lazily discards it
+    when popped. This is what lets the scheduler/taskarray layers requeue a
+    job or retry a task WITHOUT its stale completion callback firing later."""
+
+    __slots__ = ("t", "fn", "cancelled")
+
+    def __init__(self, t: float, fn: Callable[[], None]):
+        self.t = t
+        self.fn = fn
+        self.cancelled = False
+
+    @property
+    def active(self) -> bool:
+        return not self.cancelled and self.fn is not None
+
+
 class Sim:
     def __init__(self):
         self.now: float = 0.0
-        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._heap: List[Tuple[float, int, Timer]] = []
         self._seq = itertools.count()
         self._stopped = False
 
-    def schedule(self, delay: float, fn: Callable[[], None]):
+    def schedule(self, delay: float, fn: Callable[[], None]) -> Timer:
         assert delay >= 0, delay
-        heapq.heappush(self._heap, (self.now + delay, next(self._seq), fn))
+        timer = Timer(self.now + delay, fn)
+        heapq.heappush(self._heap, (timer.t, next(self._seq), timer))
+        return timer
 
-    def at(self, t: float, fn: Callable[[], None]):
-        self.schedule(max(0.0, t - self.now), fn)
+    def at(self, t: float, fn: Callable[[], None]) -> Timer:
+        return self.schedule(max(0.0, t - self.now), fn)
+
+    def cancel(self, timer: Optional[Timer]) -> bool:
+        """Cancel a pending callback; returns False if it already fired
+        (or was already cancelled / is None). Idempotent and None-safe so
+        callers can unconditionally cancel whatever handle they hold."""
+        if timer is None or not timer.active:
+            return False
+        timer.cancelled = True
+        timer.fn = None          # drop the closure (and anything it pins)
+        return True
 
     def run(self, until: Optional[float] = None) -> float:
         """Run events until the heap drains (or virtual time `until`)."""
         while self._heap and not self._stopped:
-            t, _, fn = self._heap[0]
+            t, _, timer = self._heap[0]
+            if not timer.active:
+                heapq.heappop(self._heap)     # lazily discard cancelled
+                continue
             if until is not None and t > until:
                 self.now = until
                 return self.now
             heapq.heappop(self._heap)
             self.now = t
+            fn, timer.fn = timer.fn, None     # mark fired
             fn()
         return self.now
 

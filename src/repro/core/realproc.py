@@ -22,8 +22,12 @@ import os
 import subprocess
 import sys
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import List
+
+# NOTE: repro.taskarray.runner_real generalizes this topology into a
+# PERSISTENT pool (launchers stay alive and stream tasks to workers);
+# this module remains the one-shot launch-time measurement.
 
 WORKER = ("import sys,os\n"
           "sys.stdout.write('R')\n"
@@ -53,6 +57,9 @@ class RealLaunchResult:
     n_nodes: int
     procs_per_node: int
     launch_time: float
+    # the (already-waited) Popen handles, so callers/tests can verify
+    # cleanup: every pr.poll() must be non-None (no zombies left behind)
+    procs: List[subprocess.Popen] = field(default_factory=list, repr=False)
 
     @property
     def total_procs(self) -> int:
@@ -78,7 +85,7 @@ def flat_launch(n_nodes: int, procs_per_node: int) -> RealLaunchResult:
         pr.stdin.close()
     for pr in procs:
         pr.wait()
-    return RealLaunchResult("flat", n_nodes, procs_per_node, dt)
+    return RealLaunchResult("flat", n_nodes, procs_per_node, dt, procs)
 
 
 def two_tier_launch(n_nodes: int, procs_per_node: int) -> RealLaunchResult:
@@ -93,7 +100,8 @@ def two_tier_launch(n_nodes: int, procs_per_node: int) -> RealLaunchResult:
     dt = time.monotonic() - t0
     for lp in launchers:
         lp.wait()
-    return RealLaunchResult("two-tier", n_nodes, procs_per_node, dt)
+    return RealLaunchResult("two-tier", n_nodes, procs_per_node, dt,
+                            launchers)
 
 
 def compare(n_nodes: int = 8, procs_per_node: int = 16

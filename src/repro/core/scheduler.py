@@ -27,7 +27,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from .apps import AppProfile, PROFILES
 from .cluster import Cluster, ClusterSpec, Node, TX_GREEN
-from .events import Sim
+from .events import Sim, Timer
 from .launcher import STRATEGIES, LaunchResult
 
 
@@ -66,6 +66,7 @@ class Job:
     nodes: List[Node] = field(default_factory=list)
     requeues: int = 0
     straggler_redispatches: int = 0
+    _complete_timer: Optional[Timer] = field(default=None, repr=False)
 
     @property
     def total_procs(self) -> int:
@@ -88,6 +89,34 @@ class Job:
 
 
 @dataclass
+class ArrayJob(Job):
+    """A Slurm-style job array: N tasks admitted/queued/accounted as ONE
+    unit (one queue entry, one max_jobs slot, one allocation), dispatched
+    with ONE launch (the LLMapReduce pattern, arXiv 2008.02223).
+
+    Tasks are placed round-robin over the array's nodes; each node runs its
+    tasks `tasks_per_node` at a time (its parallel-slot capacity), so a task
+    with round-robin rank r on its node starts in wave r // tasks_per_node.
+    The wave model charges each later wave the task's own runtime — an
+    approximation that is exact for uniform task work.
+
+    `task_done(index, attempt, t)` fires at every task's completion time;
+    the taskarray layer hangs gather/retry/straggler logic off it."""
+    n_tasks: int = 0
+    procs_per_task: int = 1
+    tasks_per_node: int = 1
+    task_work: Optional[List[float]] = None
+    task_done: Optional[Callable[[int, int, float], None]] = None
+    attempt: int = 1                 # forwarded to task_done (retry layers)
+
+    def node_of(self, index: int) -> int:
+        return index % self.n_nodes
+
+    def wave_of(self, index: int) -> int:
+        return (index // self.n_nodes) // max(1, self.tasks_per_node)
+
+
+@dataclass
 class UserLimits:
     """Per-user resource limits (paper T1) — token-bucket style caps that
     make ON_DEMAND admission safe against scheduler flooding."""
@@ -106,6 +135,8 @@ class SchedulerStats:
     sched_cycles: int = 0
     considered: int = 0              # queue entries examined across cycles
     straggler_redispatches: int = 0
+    arrays: int = 0                  # ArrayJobs submitted
+    array_tasks: int = 0             # tasks across all ArrayJobs
 
 
 class Scheduler:
@@ -166,6 +197,54 @@ class Scheduler:
         if self.mode in (AdmissionMode.ON_DEMAND, AdmissionMode.FLOOD) \
                 and job.interactive:
             # immediate evaluation — no waiting for the periodic cycle
+            self.sim.schedule(0.0, self._schedule_cycle)
+        else:
+            self._ensure_cycle()
+        return job
+
+    def submit_array(self, user: str, app, task_work: List[float],
+                     procs_per_task: int = 1, *, priority: int = 0,
+                     interactive: bool = True, max_nodes: Optional[int] = None,
+                     attempt: int = 1,
+                     task_done: Optional[Callable[[int, int, float], None]]
+                     = None) -> ArrayJob:
+        """Array-aware submission (Slurm job arrays / LLMapReduce): one
+        queue entry for N tasks. `task_work[i]` is task i's payload runtime;
+        `task_done(i, attempt, now)` fires as each task completes.
+
+        Node count is sized so every task gets `procs_per_task` concurrent
+        processes in wave 0, capped by `max_nodes` (default: whole cluster);
+        over the cap, tasks run in waves per node (see ArrayJob)."""
+        if isinstance(app, str):
+            app = PROFILES[app]
+        n_tasks = len(task_work)
+        assert n_tasks > 0
+        node = self.cluster.spec.node
+        slots = max(1, (node.cores * node.hyperthreads) // procs_per_task)
+        cap = max_nodes if max_nodes is not None else self.cluster.spec.n_nodes
+        n_nodes = max(1, min(cap, -(-n_tasks // slots)))
+        tasks_on_busiest = -(-n_tasks // n_nodes)
+        self._jid += 1
+        job = ArrayJob(self._jid, user, app, n_nodes,
+                       procs_per_node=min(tasks_on_busiest, slots)
+                       * procs_per_task,
+                       priority=priority, interactive=interactive,
+                       work_seconds=max(task_work),
+                       submitted_at=self.sim.now,
+                       n_tasks=n_tasks, procs_per_task=procs_per_task,
+                       tasks_per_node=slots, task_work=list(task_work),
+                       task_done=task_done, attempt=attempt)
+        self.stats.arrays += 1
+        self.stats.array_tasks += n_tasks
+        lim = self._limits_for(user)
+        pending = sum(1 for j in self.queue if j.user == user)
+        if pending >= lim.max_pending:
+            job.state = JobState.HELD
+            self.stats.held += 1
+            self.on_event("held", job)
+        self.queue.append(job)
+        if self.mode in (AdmissionMode.ON_DEMAND, AdmissionMode.FLOOD) \
+                and job.interactive:
             self.sim.schedule(0.0, self._schedule_cycle)
         else:
             self._ensure_cycle()
@@ -241,25 +320,43 @@ class Scheduler:
                                           job.procs_per_node, job.app)
         self.on_event("dispatch", job)
 
-        # payload: per-node completion = launch done + work; stragglers run
-        # straggler_factor× slower and are re-dispatched once detected.
-        per_node_done = []
-        n = len(nodes)
-        for i, t_launch in enumerate(job.launch.per_node_done):
-            work = job.work_seconds
-            if self.straggler_factor > 1.0 and n > 1 and i == n - 1:
-                # deterministic single straggler on the last node
-                median = job.work_seconds
-                detect = t_launch + median * 1.5          # detection point
-                redo = job.work_seconds                   # re-run elsewhere
-                t_done = detect + redo
-                job.straggler_redispatches += 1
-                self.stats.straggler_redispatches += 1
-            else:
-                t_done = t_launch + work
-            per_node_done.append(t_done)
-        t_finish = max(per_node_done) if per_node_done else self.sim.now
-        self.sim.at(t_finish, lambda j=job: self._complete(j))
+        if isinstance(job, ArrayJob):
+            t_finish = self._dispatch_array_tasks(job)
+        else:
+            # payload: per-node completion = launch done + work; stragglers
+            # run straggler_factor× slower, re-dispatched once detected.
+            per_node_done = []
+            n = len(nodes)
+            for i, t_launch in enumerate(job.launch.per_node_done):
+                work = job.work_seconds
+                if self.straggler_factor > 1.0 and n > 1 and i == n - 1:
+                    # deterministic single straggler on the last node
+                    median = job.work_seconds
+                    detect = t_launch + median * 1.5      # detection point
+                    redo = job.work_seconds               # re-run elsewhere
+                    t_done = detect + redo
+                    job.straggler_redispatches += 1
+                    self.stats.straggler_redispatches += 1
+                else:
+                    t_done = t_launch + work
+                per_node_done.append(t_done)
+            t_finish = max(per_node_done) if per_node_done else self.sim.now
+        job._complete_timer = self.sim.at(t_finish,
+                                          lambda j=job: self._complete(j))
+
+    def _dispatch_array_tasks(self, job: ArrayJob) -> float:
+        """Per-task completion events for an ArrayJob; returns array finish
+        time. Task i starts when ITS node's launcher has its processes up
+        (per_node_done round-robin) and runs for task_work[i] per wave."""
+        t_finish = self.sim.now
+        for i, work in enumerate(job.task_work):
+            t_launch = job.launch.per_node_done[job.node_of(i)]
+            t_done = t_launch + work * (job.wave_of(i) + 1)
+            t_finish = max(t_finish, t_done)
+            if job.task_done is not None:
+                self.sim.at(t_done, lambda i=i, t=t_done, j=job:
+                            j.task_done(i, j.attempt, t))
+        return t_finish
 
     def _complete(self, job: Job):
         if job.state != JobState.RUNNING:
@@ -298,6 +395,10 @@ class Scheduler:
         victim.state = JobState.PENDING
         victim.requeues += 1
         victim.started_at = None
+        # the first dispatch's completion event is now stale — cancel it so
+        # it cannot complete the re-dispatched run early
+        self.sim.cancel(victim._complete_timer)
+        victim._complete_timer = None
         self._release(victim)
         # released nodes minus the dead one stay free for other work
         self.queue.append(victim)

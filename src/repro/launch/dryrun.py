@@ -38,7 +38,8 @@ from repro.configs.base import SHAPES, shape_applicable
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_step
 
-from repro.launch.hloparse import collective_summary, cost_summary
+from repro.launch.hloparse import (collective_summary, cost_summary,
+                                   xla_cost_dict)
 
 
 def remat_duplication(hlo_text: str) -> Dict[str, int]:
@@ -76,7 +77,7 @@ def dryrun_cell(arch: str, shape_name: str, mesh,
         t2 = time.monotonic()
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = xla_cost_dict(compiled)
     hlo = compiled.as_text()
     coll = collective_summary(hlo).as_dict()
     # loop-aware flops/traffic (XLA's cost_analysis counts while bodies once;

@@ -217,6 +217,18 @@ def hlo_op_histogram(hlo: str) -> Dict[str, int]:
     return hist
 
 
+def xla_cost_dict(compiled) -> Dict[str, float]:
+    """compiled.cost_analysis() normalized across jax versions: 0.4.x
+    returns a one-element list of dicts, newer jax a dict (or None)."""
+    try:
+        cost = compiled.cost_analysis() or {}
+    except Exception:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 # --------------------------------------------------------------------------
 # loop-aware FLOPs / HBM-traffic model
 # --------------------------------------------------------------------------

@@ -7,10 +7,11 @@ Workflow (mirrors §III/§IV on a TPU-style runtime):
   1. PREPOSITION (slow path, before the analyst is waiting): compile the
      member-step executable and materialize base weights — the analogue of
      copying the MATLAB installs to every node's local disk.
-  2. INTERACTIVE LAUNCH: stamp N sweep members (different learning rates)
-     through the warm cache under a chip quota; report per-member launch
-     time and the aggregate launch rate, exactly the way Fig. 4 reports
-     process-launch times.
+  2. INTERACTIVE LAUNCH: submit the sweep as ONE repro.taskarray job array
+     (the LLMapReduce shape) whose tasks each stamp a member through the
+     warm cache under a chip quota; the gather layer reports per-member
+     status, retries, and the aggregate launch rate, exactly the way
+     Fig. 4 reports process-launch times.
 """
 from __future__ import annotations
 
@@ -31,6 +32,7 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import abstract_params, forward_loss, init_params
 from repro.optim import adamw_init, adamw_update
 from repro.parallel import param_specs
+from repro.taskarray import InlineRunner, RetryPolicy, TaskGraph
 
 
 def build_member_step(cfg, mesh):
@@ -86,18 +88,30 @@ def main():
                 params, opt, b, jnp.float32(member.hparams["lr"]))
         return float(loss)
 
+    # the sweep IS a task array: one task per member, gathered with
+    # per-task status/retries and an array-level launch summary
+    def member_fn(params, inputs):
+        [m] = sup.launch_sweep(cfg, shape, mesh, [params], run_member)
+        if m.state == "held":
+            raise RuntimeError("held: over chip quota")
+        return {"lr": params["lr"], "loss": m.result,
+                "launch_s": m.launch_time}
+
+    graph = TaskGraph("hparam-sweep")
+    graph.map(member_fn, grid, name="sweep")
     t0 = time.monotonic()
-    members = sup.launch_sweep(cfg, shape, mesh, grid, run_member)
+    arr = graph.run(InlineRunner(), RetryPolicy(max_retries=0))["sweep"]
     dt = time.monotonic() - t0
-    ran = [m for m in members if m.state == "running"]
-    held = [m for m in members if m.state == "held"]
-    best = min(ran, key=lambda m: m.result) if ran else None
-    print(f"launched {len(ran)}/{len(members)} members x {args.steps} steps "
-          f"in {dt:.2f}s ({len(ran)/max(dt,1e-9):.1f}/s; {len(held)} held "
+    ran = [v for v in arr.values if v is not None]
+    best = min(ran, key=lambda v: v["loss"]) if ran else None
+    print(f"launched {len(ran)}/{arr.summary.n_tasks} members x "
+          f"{args.steps} steps in {dt:.2f}s "
+          f"({len(ran)/max(dt,1e-9):.1f}/s; {arr.summary.failed} held "
           f"by quota; compiles in loop: {sup.warmer.stats['warms'] - 1 if sup.warmer.stats['warms'] > 1 else 0})")
     if best:
-        print(f"best member: lr={best.hparams['lr']:.2e} "
-              f"loss={best.result:.4f} launch={1e3*best.launch_time:.0f}ms")
+        print(f"best member: lr={best['lr']:.2e} "
+              f"loss={best['loss']:.4f} launch={1e3*best['launch_s']:.0f}ms")
+    print(f"array: {arr.summary}")
     print(f"report: {sup.launch_report()}")
 
 

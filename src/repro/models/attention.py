@@ -218,7 +218,12 @@ def attend_context_parallel(q, k, v, cfg, mesh, *, causal: bool,
     shard_map boundary — where the GSPMD-auto formulation reinserted the
     partial-sum INSIDE the KV-block scan (8 psums of [B,H,blk,hd] per layer
     per microbatch; −187 GiB/step on qwen3-14b — EXPERIMENTS.md §Perf)."""
-    from jax import shard_map
+    try:                                     # jax >= 0.6
+        from jax import shard_map
+        smap_kw = {"check_vma": False}
+    except ImportError:                      # jax 0.4.x/0.5.x
+        from jax.experimental.shard_map import shard_map
+        smap_kw = {"check_rep": False}
     from jax.sharding import PartitionSpec as P
     from repro.parallel import ctx as pctx
     T = q.shape[1]
@@ -236,7 +241,7 @@ def attend_context_parallel(q, k, v, cfg, mesh, *, causal: bool,
                              P(dp, None, None, None),
                              P(dp, None, None, None)),
                    out_specs=P(dp, "model", None, None),
-                   check_vma=False)
+                   **smap_kw)
     return fn(q, k, v)
 
 

@@ -1,0 +1,25 @@
+"""Many-task orchestration (LLMapReduce-style): job arrays + DAGs + gather.
+
+The layer between the launch machinery (core.scheduler / core.realproc)
+and the workloads (sweep, serve, train): express "run these N
+parameterized tasks, respecting dependencies, gathering results, retrying
+failures, re-dispatching stragglers" once, then execute it on a simulated
+648-node cluster (SimRunner), a persistent real-process worker pool
+(RealRunner), or inline in this interpreter (InlineRunner).
+"""
+from .api import (GraphResult, TaskArray, TaskGraph, TaskSpec, eval_cmd,
+                  gather_inputs)
+from .dag import CycleError, ready_set, topo_order
+from .gather import (ArrayResult, ArraySummary, RetryPolicy,
+                     StragglerDetector, TaskResult, summarize)
+from .runner_inline import InlineRunner
+from .runner_real import RealRunner, WorkerPool
+from .runner_sim import SimRunner
+
+__all__ = [
+    "GraphResult", "TaskArray", "TaskGraph", "TaskSpec", "eval_cmd",
+    "gather_inputs", "CycleError", "ready_set", "topo_order",
+    "ArrayResult", "ArraySummary", "RetryPolicy", "StragglerDetector",
+    "TaskResult", "summarize", "InlineRunner", "RealRunner", "WorkerPool",
+    "SimRunner",
+]

@@ -1,6 +1,9 @@
 """Discrete-event engine invariants (unit + hypothesis property tests)."""
 from __future__ import annotations
 
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

@@ -113,7 +113,8 @@ def test_cost_summary_exact_on_scan_of_matmuls():
     c = cost_summary(comp.as_text())
     want = 8 * 2 * 512**3
     assert abs(c.flops - want) / want < 0.01
-    xla = comp.cost_analysis()["flops"]
+    from repro.launch.hloparse import xla_cost_dict
+    xla = xla_cost_dict(comp)["flops"]
     assert xla < want / 2                      # demonstrates loop-blindness
     # traffic: >= 8 iterations x 3 x 1 MiB buffers, < 4x that (copies)
     assert 8 * 3 * 2**20 <= c.traffic_bytes <= 4 * 8 * 3 * 2**20

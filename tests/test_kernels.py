@@ -5,11 +5,13 @@ ref.py oracle; hypothesis drives randomized shape/parameter combinations.
 """
 from __future__ import annotations
 
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.kernels import ref

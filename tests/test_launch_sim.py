@@ -1,8 +1,10 @@
 """Launch strategies + cluster model (paper §III): orderings and invariants."""
 from __future__ import annotations
 
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.apps import PROFILES

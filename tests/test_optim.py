@@ -1,10 +1,12 @@
 """Optimizer, LR schedule, and gradient compression."""
 from __future__ import annotations
 
+import pytest
+
+pytest.importorskip("hypothesis")
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 import hypothesis.strategies as st
 

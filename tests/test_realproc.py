@@ -1,6 +1,8 @@
 """Real-process launch harness: the §III topologies with actual OS forks."""
 from __future__ import annotations
 
+import os
+
 import pytest
 
 from repro.core.realproc import compare, flat_launch, two_tier_launch
@@ -26,3 +28,28 @@ def test_compare_returns_both():
     # on a 1-core container the parallelism win is noisy — only sanity-bound
     # the ratio; the calibrated comparison lives in benchmarks/real_launch.
     assert twot.launch_time < flat.launch_time * 5
+
+
+def test_two_tier_beats_flat_launch_rate():
+    """The paper's T3 claim with real forks: per-node launchers spawning in
+    parallel beat one central dispatch loop. The win NEEDS parallel cores —
+    on a 1-2 core container two-tier only adds process overhead, so the
+    qualitative comparison is skipped there (the simulator covers it)."""
+    if (os.cpu_count() or 1) < 4:
+        pytest.skip("two-tier parallelism win needs >= 4 cores")
+    # best-of-2 per topology to shave scheduler noise
+    flat = min((flat_launch(4, 8) for _ in range(2)),
+               key=lambda r: r.launch_time)
+    twot = min((two_tier_launch(4, 8) for _ in range(2)),
+               key=lambda r: r.launch_time)
+    assert twot.launch_rate > flat.launch_rate, (
+        flat.launch_rate, twot.launch_rate)
+
+
+def test_no_zombies_after_compare():
+    """Worker cleanup: every spawned process must be fully reaped — poll()
+    returns an exit status (not None) for each recorded Popen handle."""
+    for result in compare(2, 4):
+        assert result.procs, result.strategy
+        for pr in result.procs:
+            assert pr.poll() is not None, (result.strategy, pr.pid)

@@ -1,0 +1,333 @@
+"""repro.taskarray: DAGs, gather/retry/straggler logic, and all 3 runners.
+
+Includes the acceptance DAG: the same 3-array map->reduce graph runs to
+completion on BOTH the sim scheduler and the real process pool, with an
+injected task failure retried and an injected straggler re-dispatched.
+Also holds the Sim.cancel unit tests (test_events skips wholesale when
+hypothesis is absent) and the scheduler array-submission tests.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.cluster import Cluster, ClusterSpec
+from repro.core.events import Sim
+from repro.core.scheduler import (AdmissionMode, ArrayJob, JobState,
+                                  Scheduler, UserLimits)
+from repro.taskarray import (CycleError, InlineRunner, RealRunner,
+                             RetryPolicy, SimRunner, StragglerDetector,
+                             TaskGraph, WorkerPool, topo_order)
+
+# --------------------------------------------------------------------------
+# the acceptance DAG: shards (map) -> sums (map) -> total (reduce)
+# --------------------------------------------------------------------------
+
+
+def build_dag(n=6, work=1.0, inject=True):
+    """Deterministic integer pipeline with BOTH payload forms, so the same
+    graph runs on sim (fn), inline (fn) and real (cmd) runners."""
+    g = TaskGraph("accept")
+    shards = g.map(lambda p, i: list(range(p["seed"], p["seed"] + 4)),
+                   [{"seed": s} for s in range(n)],
+                   cmd="list(range(params['seed'], params['seed'] + 4))",
+                   name="shards", work_seconds=work)
+    sums = g.map(lambda p, i: sum(i["shards"][p["i"]]),
+                 [{"i": i} for i in range(n)],
+                 cmd="sum(inputs['shards'][params['i']])",
+                 name="sums", deps=[shards], work_seconds=work)
+    g.reduce(lambda p, i: sum(i["sums"][p["lo"]:p["hi"]]),
+             sums, cmd="sum(inputs['sums'][params['lo']:params['hi']])",
+             name="total", work_seconds=work)
+    if inject:
+        sums.tasks[1].fail_attempts = 1        # fails once, then succeeds
+        sums.tasks[3].straggle_factor = 8.0    # slow node on attempt 1
+    return g
+
+
+def expected_total(n=6):
+    return sum(sum(range(s, s + 4)) for s in range(n))
+
+
+def check_acceptance(res, n=6):
+    assert res.all_ok
+    assert res["total"].values[0] == expected_total(n)
+    sums = res["sums"]
+    assert sums.results[1].attempts >= 2           # injected failure retried
+    assert sums.summary.retries >= 1
+    assert sums.summary.straggler_redispatches >= 1
+    assert sums.results[3].redispatched
+
+
+def test_sim_runner_acceptance_dag():
+    runner = SimRunner()
+    res = build_dag(work=1.0).run(
+        runner, RetryPolicy(max_retries=2, backoff=0.2, straggler_k=3.0,
+                            min_straggler_samples=3, scan_period=0.25))
+    check_acceptance(res)
+    # the straggler's duplicate won: makespan well under the 8x stretch
+    assert res["sums"].summary.makespan < 8.0 * 1.0
+    assert runner.sched.stats.arrays >= 3          # +1 per retry/duplicate
+
+
+def test_real_runner_acceptance_dag():
+    with RealRunner(n_launchers=2, workers_per_launcher=3) as rr:
+        res = build_dag(work=0.08).run(
+            rr, RetryPolicy(max_retries=2, backoff=0.05, straggler_k=3.0,
+                            min_straggler_samples=3, scan_period=0.05))
+        check_acceptance(res)
+        pool = rr.pool
+    # context exit closed the pool: launchers fully reaped, no zombies
+    for lp in pool.launchers:
+        assert lp.poll() is not None
+
+
+def test_sim_and_real_agree_on_values():
+    clean = build_dag(inject=False, work=0.02)
+    sim_res = clean.run(SimRunner(), RetryPolicy())
+    with RealRunner(n_launchers=1, workers_per_launcher=2) as rr:
+        real_res = clean.run(rr, RetryPolicy())
+    assert sim_res["total"].values == real_res["total"].values
+    assert sim_res["sums"].values == real_res["sums"].values
+
+
+def test_inline_runner_with_retries():
+    res = build_dag(work=0.001).run(InlineRunner(sleep=False),
+                                    RetryPolicy(max_retries=1))
+    assert res.all_ok
+    assert res["total"].values[0] == expected_total()
+    assert res["sums"].results[1].attempts == 2
+
+
+def test_retries_exhausted_marks_failed():
+    g = TaskGraph("f")
+    arr = g.map(lambda p, i: 1, [{}], name="a", work_seconds=0.01)
+    arr.tasks[0].fail_attempts = 99
+    res = g.run(SimRunner(), RetryPolicy(max_retries=2, backoff=0.1))
+    assert not res.all_ok
+    assert res["a"].results[0].status == "failed"
+    assert res["a"].results[0].attempts == 3       # 1 + 2 retries
+
+
+# --------------------------------------------------------------------------
+# DAG logic
+# --------------------------------------------------------------------------
+
+
+def test_dag_cycle_detected():
+    g = TaskGraph("c")
+    a = g.map(lambda p, i: 0, [{}], name="a")
+    b = g.map(lambda p, i: 0, [{}], name="b", deps=[a])
+    a.deps.append(b)
+    with pytest.raises(CycleError):
+        g.validate()
+
+
+def test_dag_topo_order_and_overlap():
+    g = TaskGraph("d")
+    a = g.map(lambda p, i: 0, [{}], name="a")
+    b = g.map(lambda p, i: 0, [{}], name="b", deps=[a])
+    c = g.map(lambda p, i: 0, [{}], name="c", deps=[a])
+    d = g.map(lambda p, i: 0, [{}], name="d", deps=[b, c])
+    order = [x.name for x in topo_order(g.arrays)]
+    assert order.index("a") < order.index("b") < order.index("d")
+    assert order.index("a") < order.index("c") < order.index("d")
+    # independent branches b and c overlap in sim time
+    res = g.run(SimRunner(), RetryPolicy())
+    assert res.all_ok and set(res) == {"a", "b", "c", "d"}
+
+
+def test_duplicate_array_name_rejected():
+    g = TaskGraph("dup")
+    g.map(lambda p, i: 0, [{}], name="a")
+    with pytest.raises(ValueError):
+        g.map(lambda p, i: 0, [{}], name="a")
+
+
+def test_reduce_fan_in_slices():
+    g = TaskGraph("r")
+    src = g.map(lambda p, i: p["x"], [{"x": x} for x in range(10)],
+                name="src")
+    red = g.reduce(lambda p, i: sum(i["src"][p["lo"]:p["hi"]]), src,
+                   fan_in=4, name="red")
+    assert red.n_tasks == 3                        # 4 + 4 + 2
+    res = g.run(InlineRunner(sleep=False))
+    assert sum(res["red"].values) == sum(range(10))
+
+
+# --------------------------------------------------------------------------
+# gather primitives
+# --------------------------------------------------------------------------
+
+
+def test_retry_policy_backoff():
+    p = RetryPolicy(max_retries=3, backoff=0.5, backoff_factor=2.0)
+    assert p.delay(1) == 0.5
+    assert p.delay(2) == 1.0
+    assert p.delay(3) == 2.0
+    assert p.may_retry(3) and not p.may_retry(4)
+
+
+def test_straggler_detector_median_threshold():
+    d = StragglerDetector(k=3.0, min_samples=3)
+    assert d.threshold() is None
+    d.update(1.0)
+    d.update(2.0)
+    assert d.threshold() is None                   # below min_samples
+    d.update(3.0)
+    assert d.median() == 2.0
+    assert d.threshold() == 6.0
+    assert d.is_straggler(6.1) and not d.is_straggler(5.9)
+    d.update(100.0)                                # even counts: midpoint
+    assert d.median() == 2.5
+
+
+# --------------------------------------------------------------------------
+# scheduler: array-aware submission
+# --------------------------------------------------------------------------
+
+
+def _sched(n_nodes=8, **kw):
+    sim = Sim()
+    cluster = Cluster(sim, ClusterSpec(n_nodes=n_nodes))
+    cluster.preposition("python")
+    return sim, Scheduler(sim, cluster, mode=AdmissionMode.ON_DEMAND, **kw)
+
+
+def test_submit_array_accounted_as_one_job():
+    """50 tasks under max_jobs=1: a per-task submission would deadlock at
+    one task; a job ARRAY is one unit and runs them all."""
+    sim, sched = _sched(default_limits=UserLimits(max_jobs=1))
+    done = []
+    job = sched.submit_array("u", "python", [0.5] * 50, 1,
+                             task_done=lambda i, a, t: done.append(i))
+    sched.run()
+    assert isinstance(job, ArrayJob)
+    assert job.state == JobState.COMPLETED
+    assert sorted(done) == list(range(50))
+    assert sched.stats.arrays == 1
+    assert sched.stats.array_tasks == 50
+    assert sched.stats.dispatched == 1             # ONE dispatch unit
+
+
+def test_submit_array_wave_packing():
+    """More tasks than cluster slots: waves per node, still completes."""
+    sim, sched = _sched(n_nodes=2)
+    slots = 2 * 64 * 4                             # nodes x cores x HT
+    n = slots + 10
+    times = {}
+    job = sched.submit_array("u", "python", [1.0] * n, 1,
+                             task_done=lambda i, a, t: times.__setitem__(i, t))
+    sched.run()
+    assert job.state == JobState.COMPLETED
+    assert len(times) == n
+    # the overflow tasks run a wave later than the first ones
+    assert max(times.values()) > min(times.values())
+
+
+def test_requeue_cancels_stale_completion():
+    """Regression: after a node failure requeues a job, the FIRST
+    dispatch's completion event must not complete the re-dispatched run
+    early (it used to fire while the job was RUNNING again)."""
+    sim, sched = _sched(n_nodes=4)
+    job = sched.submit("u", "python", 2, 4, work_seconds=100.0)
+    sched.run(until=10.0)
+    assert job.state == JobState.RUNNING
+    sched.fail_node(job.nodes[0].id)
+    sched.run()
+    assert job.state == JobState.COMPLETED
+    assert job.requeues == 1
+    # full payload re-ran after the requeue-time re-dispatch
+    assert job.finished_at - job.started_at >= 100.0
+
+
+# --------------------------------------------------------------------------
+# events: cancellable timers (satellite for taskarray retry timers)
+# --------------------------------------------------------------------------
+
+
+def test_sim_cancel_pending_timer():
+    sim = Sim()
+    fired = []
+    t = sim.schedule(1.0, lambda: fired.append(1))
+    assert sim.cancel(t) is True
+    sim.run()
+    assert fired == []
+    assert sim.now == 0.0                          # cancelled events: no time
+
+
+def test_sim_cancel_after_fire_is_noop():
+    sim = Sim()
+    fired = []
+    t = sim.schedule(1.0, lambda: fired.append(1))
+    sim.run()
+    assert fired == [1]
+    assert sim.cancel(t) is False
+    assert sim.cancel(None) is False
+    assert sim.cancel(t) is False                  # idempotent
+
+
+def test_sim_cancel_interleaved():
+    sim = Sim()
+    order = []
+    keep = sim.schedule(2.0, lambda: order.append("keep"))
+    drop = sim.schedule(1.0, lambda: order.append("drop"))
+    sim.schedule(0.5, lambda: sim.cancel(drop))
+    sim.run()
+    assert order == ["keep"]
+    assert keep.active is False
+
+
+# --------------------------------------------------------------------------
+# real worker pool mechanics
+# --------------------------------------------------------------------------
+
+
+def test_worker_pool_persists_across_graphs():
+    """The pool outlives arrays AND graphs — dispatch without re-launch."""
+    with RealRunner(n_launchers=1, workers_per_launcher=2) as rr:
+        g1 = TaskGraph("g1")
+        g1.map(cmd="params['x'] + 1", params=[{"x": x} for x in range(4)],
+               name="a")
+        g2 = TaskGraph("g2")
+        g2.map(cmd="params['x'] * 2", params=[{"x": x} for x in range(4)],
+               name="b")
+        r1 = g1.run(rr, RetryPolicy())
+        pool = rr.pool
+        r2 = g2.run(rr, RetryPolicy())
+        assert rr.pool is pool                     # same processes
+        assert r1["a"].values == [1, 2, 3, 4]
+        assert r2["b"].values == [0, 2, 4, 6]
+
+
+def test_worker_pool_error_payload():
+    """A payload exception comes back as a failed task, not a hang."""
+    g = TaskGraph("err")
+    g.map(cmd="1 / 0", params=[{}], name="boom", work_seconds=0.01)
+    with RealRunner(n_launchers=1, workers_per_launcher=1) as rr:
+        res = g.run(rr, RetryPolicy(max_retries=1, backoff=0.01))
+    r = res["boom"].results[0]
+    assert r.status == "failed"
+    assert "ZeroDivisionError" in r.error
+    assert r.attempts == 2
+
+
+def test_real_runner_requires_cmd():
+    g = TaskGraph("nocmd")
+    g.map(lambda p, i: 0, [{}], name="fn_only")
+    with RealRunner(n_launchers=1, workers_per_launcher=1) as rr:
+        with pytest.raises(ValueError, match="cmd"):
+            g.run(rr, RetryPolicy())
+
+
+# --------------------------------------------------------------------------
+# throughput floor (the benchmark's acceptance bar, kept cheap)
+# --------------------------------------------------------------------------
+
+
+def test_sim_dispatch_throughput_floor():
+    sim, sched = _sched(n_nodes=648)
+    job = sched.submit_array("u", "python", [0.5] * 5000, 1)
+    sched.run()
+    assert job.state == JobState.COMPLETED
+    rate = job.n_tasks / job.launch.launch_time
+    assert rate >= 1000.0, rate
