@@ -1,5 +1,5 @@
 # Repo entrypoints. `make test` is the tier-1 verify from ROADMAP.md.
-.PHONY: test test-deps bench-taskarray
+.PHONY: test test-deps bench-taskarray bench-smoke
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q $(ARGS)
@@ -9,3 +9,9 @@ test-deps:
 
 bench-taskarray:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/bench_taskarray.py
+
+# Reduced dispatch benchmark across all repro.exec backends; records the
+# perf trajectory in BENCH_taskarray.json. Opt into it during the tier-1
+# run with BENCH_SMOKE=1 scripts/test.sh.
+bench-smoke:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/bench_taskarray.py --smoke --json-out BENCH_taskarray.json

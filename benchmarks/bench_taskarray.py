@@ -1,26 +1,34 @@
-"""Task-array dispatch throughput: sim scheduler and real worker pool.
+"""Task-array dispatch throughput across the repro.exec backends.
 
 The paper's headline (262,144 processes in ~40 s, ~6000 launches/s
-sustained) restated at the taskarray layer:
+sustained) restated at the taskarray layer, now measured through the
+unified execution layer so every backend reports the same shape:
 
-  sim   submit one N-task ArrayJob to the simulated TX-Green through
-        two-tier dispatch; throughput = N / launch_time (simulated
-        seconds). Acceptance floor: >= 1000 tasks/s.
-  flat  the same N tasks dispatched one scheduler op each (the naive
-        job-array), for the ratio the paper's T3 topology buys.
-  real  stream N trivial tasks through a persistent WorkerPool on this
-        host; throughput = N / wall seconds (pool launch cost reported
-        separately — paid once per session, not per array).
+  sim        submit one N-task ArrayJob to the simulated TX-Green through
+             two-tier dispatch; throughput = N / launch_time (simulated
+             seconds). Acceptance floor: >= 1000 tasks/s.
+  flat       the same N tasks dispatched one scheduler op each (the naive
+             job-array), for the ratio the paper's T3 topology buys.
+  <backend>  the same TaskGraph run through each exec backend (sim /
+             procpool / inline), reporting the gather layer's dispatch
+             rate plus the structured event stream counts.
+  launch     one-shot LaunchPlan measurement per backend (LaunchReport).
+
+    python benchmarks/bench_taskarray.py                 # full
+    python benchmarks/bench_taskarray.py --smoke \
+        --json-out BENCH_taskarray.json                  # make bench-smoke
 """
 from __future__ import annotations
 
-import time
+import argparse
+import json
 from typing import Dict, List
 
-from repro.core.cluster import Cluster, ClusterSpec, TX_GREEN
+from repro.core.cluster import Cluster, TX_GREEN
 from repro.core.events import Sim
 from repro.core.scheduler import AdmissionMode, Scheduler, UserLimits
-from repro.taskarray import RetryPolicy, SimRunner, TaskGraph, WorkerPool
+from repro.exec import LaunchPlan, get_backend
+from repro.taskarray import RetryPolicy, TaskGraph
 
 
 def _sim_dispatch(n_tasks: int, strategy: str) -> Dict:
@@ -40,56 +48,80 @@ def _sim_dispatch(n_tasks: int, strategy: str) -> Dict:
             "makespan_s": round(job.finished_at - job.submitted_at, 3)}
 
 
-def _sim_graph(n_tasks: int) -> Dict:
-    """Whole-subsystem path: TaskGraph -> SimRunner -> gather summary."""
+def _graph(n_tasks: int, work_seconds: float) -> TaskGraph:
+    """One map array carrying BOTH payload forms, so the identical graph
+    runs on every backend (fn for sim/inline, cmd for procpool)."""
     g = TaskGraph("bench")
-    g.map(lambda p, i: p["x"], [{"x": i} for i in range(n_tasks)],
-          name="tasks", work_seconds=0.5)
-    res = g.run(SimRunner(), RetryPolicy())
+    g.map(lambda p, i: p["x"] * 2, [{"x": i} for i in range(n_tasks)],
+          cmd="params['x'] * 2", name="tasks", work_seconds=work_seconds)
+    return g
+
+
+def _backend_graph(name: str, n_tasks: int, **kwargs) -> Dict:
+    """Whole-subsystem path: TaskGraph -> exec backend -> unified report."""
+    work = 0.5 if name == "sim" else 0.0
+    pool_launch = None
+    with get_backend(name, **kwargs) as backend:
+        res = _graph(n_tasks, work).run(backend, RetryPolicy())
+        if getattr(backend, "pool", None) is not None:
+            pool_launch = round(backend.pool.launch_time, 3)
     s = res["tasks"].summary
-    return {"fig": "taskarray_sim_graph", "tasks": n_tasks,
-            "dispatch_tasks_per_s": round(s.dispatch_rate, 1),
-            "makespan_s": round(s.makespan, 3)}
+    assert res.all_ok
+    row = {"fig": "taskarray_backend", "backend": name, "tasks": n_tasks,
+           "dispatch_tasks_per_s": round(s.dispatch_rate, 1),
+           "makespan_s": round(s.makespan, 3),
+           "events": res.events.counts()}
+    if pool_launch is not None:
+        row["pool_launch_s"] = pool_launch
+    return row
 
 
-def _real_pool(n_tasks: int, n_launchers: int = 4,
-               workers_per_launcher: int = 4) -> Dict:
-    with WorkerPool(n_launchers, workers_per_launcher) as pool:
-        got: List[dict] = []
-        import threading
-        cond = threading.Condition()
-
-        def on_result(msg):
-            with cond:
-                got.append(msg)
-                cond.notify_all()
-
-        pool.on_result = on_result
-        t0 = time.monotonic()
-        for i in range(n_tasks):
-            pool.submit({"id": f"bench:{i}:1",
-                         "expr": "params['x'] * 2", "params": {"x": i}})
-        with cond:
-            while len(got) < n_tasks:
-                cond.wait(timeout=1.0)
-        dt = time.monotonic() - t0
-    assert all(m["ok"] for m in got)
-    return {"fig": "taskarray_real", "tasks": n_tasks,
-            "pool": f"{n_launchers}x{workers_per_launcher}",
-            "pool_launch_s": round(pool.launch_time, 3),
-            "wall_s": round(dt, 3),
-            "tasks_per_s": round(n_tasks / dt, 1)}
+def _backend_launch(name: str, n_nodes: int, procs_per_node: int,
+                    **kwargs) -> Dict:
+    with get_backend(name, **kwargs) as backend:
+        report = backend.launch(LaunchPlan(n_nodes, procs_per_node))
+    row = report.row()
+    row["fig"] = "launch_report"
+    return row
 
 
-def run(sim_tasks: int = 20000, real_tasks: int = 400) -> List[Dict]:
+def run(sim_tasks: int = 20000, real_tasks: int = 400,
+        pool: str = "4x4", launch_nodes: int = 4,
+        launch_procs: int = 8) -> List[Dict]:
+    n_launchers, workers = (int(x) for x in pool.split("x"))
     rows = [_sim_dispatch(sim_tasks, "two-tier"),
             _sim_dispatch(sim_tasks, "flat"),
-            _sim_graph(sim_tasks // 4),
-            _real_pool(real_tasks)]
+            _backend_graph("sim", sim_tasks // 4),
+            _backend_graph("procpool", real_tasks,
+                           n_launchers=n_launchers,
+                           workers_per_launcher=workers),
+            _backend_graph("inline", real_tasks),
+            _backend_launch("sim", launch_nodes, launch_procs),
+            _backend_launch("procpool", launch_nodes, launch_procs),
+            _backend_launch("inline", launch_nodes, launch_procs)]
     assert rows[0]["dispatch_tasks_per_s"] >= 1000, rows[0]   # acceptance
     return rows
 
 
-if __name__ == "__main__":
-    for row in run():
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configuration (CI perf-trajectory record)")
+    ap.add_argument("--json-out", default=None,
+                    help="also write rows as a JSON file")
+    args = ap.parse_args()
+    if args.smoke:
+        rows = run(sim_tasks=5000, real_tasks=64, pool="2x2",
+                   launch_nodes=2, launch_procs=4)
+    else:
+        rows = run()
+    for row in rows:
         print(",".join(f"{k}={v}" for k, v in row.items()))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"smoke": args.smoke, "rows": rows}, f, indent=2)
+        print(f"wrote {args.json_out}")
+
+
+if __name__ == "__main__":
+    main()

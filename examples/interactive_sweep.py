@@ -101,11 +101,21 @@ def main():
 
     t0 = time.monotonic()
     members = sup.launch_sweep(cfg, shape, mesh, grid, run_member)
+    # chips are held for each member's LIFETIME; run_member finished the
+    # member's steps, so release and admit the held backlog (quota
+    # contention + retry_held: members launch in waves of quota capacity)
+    waves = 1
+    launched = [m for m in members if m.state == "running"]
+    while launched:
+        for m in launched:
+            sup.release(m)
+        launched = sup.retry_held()
+        waves += bool(launched)
     dt = time.monotonic() - t0
 
     print(f"\nlaunched {len(members)} sweep members x {args.steps} steps in "
-          f"{dt:.2f}s ({len(members)/dt:.1f} members/s) — zero compiles in "
-          f"the loop ({sup.warmer.stats})")
+          f"{dt:.2f}s ({len(members)/dt:.1f} members/s, {waves} quota "
+          f"wave(s)) — zero compiles in the loop ({sup.warmer.stats})")
     best = min(members, key=lambda m: m.result)
     for m in members:
         bar = "#" * int(max(0.0, 8 - m.result) * 8)

@@ -4,11 +4,12 @@
 
 `shards` generates deterministic zipf-ish word shards, `counts` computes
 per-shard word histograms, `top` merges them and reports the top-k. The
-SAME graph runs on all three runners (payloads carry both fn and cmd):
+SAME graph runs on all three repro.exec backends (payloads carry both fn
+and cmd):
 
-    PYTHONPATH=src python examples/mapreduce_wordstats.py --runner sim
-    PYTHONPATH=src python examples/mapreduce_wordstats.py --runner real
-    PYTHONPATH=src python examples/mapreduce_wordstats.py --runner inline
+    PYTHONPATH=src python examples/mapreduce_wordstats.py --backend sim
+    PYTHONPATH=src python examples/mapreduce_wordstats.py --backend procpool
+    PYTHONPATH=src python examples/mapreduce_wordstats.py --backend inline
 
 --inject fails one count task (retried with backoff) and straggles
 another (re-dispatched once k x median elapses) — watch the summary lines.
@@ -17,8 +18,8 @@ from __future__ import annotations
 
 import argparse
 
-from repro.taskarray import (InlineRunner, RealRunner, RetryPolicy,
-                             SimRunner, TaskGraph)
+from repro.exec import get_backend
+from repro.taskarray import RetryPolicy, TaskGraph
 
 VOCAB = ["the", "of", "launch", "node", "core", "octave", "matlab",
          "interactive", "scheduler", "cluster", "task", "array"]
@@ -80,8 +81,10 @@ def build_graph(n_shards: int = 16, n_words: int = 200, k: int = 5,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--runner", choices=("sim", "real", "inline"),
-                    default="sim")
+    ap.add_argument("--backend", "--runner", dest="backend",
+                    choices=("sim", "procpool", "real", "inline"),
+                    default="sim",
+                    help="repro.exec backend ('real' = procpool alias)")
     ap.add_argument("--shards", type=int, default=16)
     ap.add_argument("--words", type=int, default=200)
     ap.add_argument("--top", type=int, default=5)
@@ -92,15 +95,13 @@ def main():
     g = build_graph(args.shards, args.words, args.top, inject=args.inject)
     policy = RetryPolicy(max_retries=2, backoff=0.1, straggler_k=3.0,
                          scan_period=0.1)
-    if args.runner == "sim":
-        res = g.run(SimRunner(), policy)
-    elif args.runner == "real":
-        with RealRunner(n_launchers=2, workers_per_launcher=4) as rr:
-            res = rr.run_graph(g, policy)
-    else:
-        res = g.run(InlineRunner(), policy)
+    kwargs = ({"n_launchers": 2, "workers_per_launcher": 4}
+              if args.backend in ("procpool", "real") else {})
+    with get_backend(args.backend, **kwargs) as backend:
+        res = g.run(backend, policy)
 
     print(res.report())
+    print(f"events: {res.events.counts()}")
     top = res["top"].values[0]
     print(f"top-{args.top} words over {args.shards} shards: "
           + ", ".join(f"{w}={n}" for w, n in top))

@@ -1,7 +1,14 @@
 #!/usr/bin/env sh
 # Tier-1 verify: one memorable invocation (see ROADMAP.md).
-#   scripts/test.sh            -> whole suite
-#   scripts/test.sh tests/x.py -> pass-through pytest args
+#   scripts/test.sh               -> whole suite
+#   scripts/test.sh tests/x.py    -> pass-through pytest args
+#   BENCH_SMOKE=1 scripts/test.sh -> suite, then the reduced exec-backend
+#                                    benchmark (writes BENCH_taskarray.json)
 set -eu
 cd "$(dirname "$0")/.."
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+if [ "${BENCH_SMOKE:-0}" = "1" ]; then
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python benchmarks/bench_taskarray.py --smoke \
+        --json-out BENCH_taskarray.json
+fi

@@ -103,11 +103,14 @@ class HierarchicalSshTree:
         t_tree = depth * spec.ssh_latency
         per_node_done = []
         for nd in nodes:
-            t_sp = t0 + t_tree + nd.spawner.eta(procs_per_node) - sim.now
-            nd.spawner.request(procs_per_node)
+            # each node backgrounds its P procs locally once the tree
+            # reaches it; nodes spawn in parallel, so the per-node spawner
+            # is charged directly (no Resource booking — each launch is the
+            # node's only spawn, and double-booking the Resource on top of
+            # this term was overstating occupancy)
+            t_spawned = t0 + t_tree + procs_per_node / nd.spec.fork_rate
             done = _app_start_done(cluster, nd, app, procs_per_node,
-                                   t0 + t_tree + procs_per_node /
-                                   nd.spec.fork_rate)
+                                   t_spawned)
             per_node_done.append(done)
         t_all = max(per_node_done)
         return LaunchResult(self.name, app.name, len(nodes), procs_per_node,

@@ -1,58 +1,36 @@
 """Real-process two-tier launch harness (methodology check, §III/§IV).
 
-The simulator (core.cluster/launcher) models TX-Green; this module runs the
-SAME two launch topologies with real OS processes on this host, so the
-simulator's qualitative claim — two-tier >> flat dispatch — is validated
-against actual fork/exec behaviour, not just a cost model:
+DEPRECATION SHIM: the actual machinery — the JSON-pipe WORKER/LAUNCHER
+protocol, readiness waits with timeout, and try/finally teardown — lives
+in repro.exec.pool (launch_once / WorkerPool), shared with the persistent
+ProcPoolBackend so the two-tier topology is defined in exactly one place.
+This module keeps the original public names for existing callers/tests:
 
-  flat      the "scheduler" (this process) forks every worker itself:
-            N_nodes * P sequential dispatch operations from one loop.
-  two-tier  the scheduler forks ONE launcher per simulated node; each
-            launcher spawns and backgrounds its P workers locally and
-            reports when all are running (paper T3).
+  flat_launch      the "scheduler" (this process) forks every worker
+                   itself: N_nodes * P sequential dispatch operations.
+  two_tier_launch  the scheduler forks ONE launcher per simulated node;
+                   each launcher spawns its P workers locally and reports
+                   when all are running (paper T3).
+  compare          both, for the ratio (which is load-independent).
 
-Workers touch a tiny "application" payload and signal readiness via their
-stdout pipe; launch time = submit -> last worker ready. Worker counts are
-kept modest (hundreds, not 262k) — the point is the *ratio* between
-topologies, which is load-independent.
+Worker counts stay modest (hundreds, not 262k) — the point is the *ratio*
+between topologies. New code should call
+repro.exec.ProcPoolBackend().launch(LaunchPlan(...)) instead.
 """
 from __future__ import annotations
 
-import os
 import subprocess
-import sys
-import time
 from dataclasses import dataclass, field
 from typing import List
 
-# NOTE: repro.taskarray.runner_real generalizes this topology into a
-# PERSISTENT pool (launchers stay alive and stream tasks to workers);
-# this module remains the one-shot launch-time measurement.
-
-WORKER = ("import sys,os\n"
-          "sys.stdout.write('R')\n"
-          "sys.stdout.flush()\n"
-          "os.read(0, 1)\n")          # stay alive until stdin closes
-
-LAUNCHER = r"""
-import subprocess, sys, os
-p = int(sys.argv[1])
-procs = [subprocess.Popen([sys.executable, '-c', %r],
-                          stdin=subprocess.PIPE, stdout=subprocess.PIPE)
-         for _ in range(p)]
-for pr in procs:
-    assert pr.stdout.read(1) == b'R'
-sys.stdout.write('A')                 # all P workers running on this "node"
-sys.stdout.flush()
-for pr in procs:
-    pr.stdin.close()
-for pr in procs:
-    pr.wait()
-""" % WORKER
+from repro.exec.pool import LAUNCHER_SRC as LAUNCHER   # noqa: F401  (compat)
+from repro.exec.pool import WORKER_SRC as WORKER       # noqa: F401  (compat)
+from repro.exec.pool import launch_once
 
 
 @dataclass
 class RealLaunchResult:
+    """Legacy stats shape; prefer repro.exec.LaunchReport (`.report`)."""
     strategy: str
     n_nodes: int
     procs_per_node: int
@@ -60,6 +38,7 @@ class RealLaunchResult:
     # the (already-waited) Popen handles, so callers/tests can verify
     # cleanup: every pr.poll() must be non-None (no zombies left behind)
     procs: List[subprocess.Popen] = field(default_factory=list, repr=False)
+    report: object = field(default=None, repr=False)   # LaunchReport
 
     @property
     def total_procs(self) -> int:
@@ -70,38 +49,21 @@ class RealLaunchResult:
         return self.total_procs / max(self.launch_time, 1e-9)
 
 
+def _launch(topology: str, n_nodes: int, procs_per_node: int
+            ) -> RealLaunchResult:
+    report, procs = launch_once(n_nodes, procs_per_node, topology=topology)
+    return RealLaunchResult(topology, n_nodes, procs_per_node,
+                            report.launch_time, procs, report)
+
+
 def flat_launch(n_nodes: int, procs_per_node: int) -> RealLaunchResult:
     """Central loop forks every worker (the naive topology)."""
-    t0 = time.monotonic()
-    procs = []
-    for _ in range(n_nodes * procs_per_node):
-        procs.append(subprocess.Popen(
-            [sys.executable, "-c", WORKER],
-            stdin=subprocess.PIPE, stdout=subprocess.PIPE))
-    for pr in procs:
-        assert pr.stdout.read(1) == b"R"
-    dt = time.monotonic() - t0
-    for pr in procs:
-        pr.stdin.close()
-    for pr in procs:
-        pr.wait()
-    return RealLaunchResult("flat", n_nodes, procs_per_node, dt, procs)
+    return _launch("flat", n_nodes, procs_per_node)
 
 
 def two_tier_launch(n_nodes: int, procs_per_node: int) -> RealLaunchResult:
     """One launcher per node; launchers spawn their workers in parallel."""
-    t0 = time.monotonic()
-    launchers = [subprocess.Popen(
-        [sys.executable, "-c", LAUNCHER, str(procs_per_node)],
-        stdout=subprocess.PIPE)
-        for _ in range(n_nodes)]
-    for lp in launchers:
-        assert lp.stdout.read(1) == b"A"
-    dt = time.monotonic() - t0
-    for lp in launchers:
-        lp.wait()
-    return RealLaunchResult("two-tier", n_nodes, procs_per_node, dt,
-                            launchers)
+    return _launch("two-tier", n_nodes, procs_per_node)
 
 
 def compare(n_nodes: int = 8, procs_per_node: int = 16

@@ -7,9 +7,16 @@ On a TPU pod the resources are chips, not cores; the supervisor
     sweep member its own (data, model) mesh (the analogue of whole-node
     allocation),
   * enforces per-session **chip quotas** (paper T1: user resource limits,
-    the safe point in the Fig-2 quadrant),
+    the safe point in the Fig-2 quadrant). Chips are held for the
+    MEMBER'S LIFETIME — acquired at launch, returned by `release()` (or
+    on a failed launch) — so concurrent members genuinely contend, and
+    members held at admission can be launched later via `retry_held()`,
   * launches members through the prepositioned compile cache (paper T4),
     so the interactive loop contains zero XLA compiles,
+  * dispatches through the unified execution layer (repro.exec): each
+    launch_sweep call submits ONE task array to an ExecBackend
+    (InlineBackend by default), so members get the same gather
+    summaries and structured event stream as every other launch route,
   * reports *launch time to first step* per member — exactly what Fig. 4
     reports as process-launch time.
 
@@ -30,6 +37,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.configs.base import ArchConfig, ShapeConfig
+from repro.exec.base import COMPLETE, SUBMIT, EventLog
 from .preposition import CompileCacheWarmer, WeightPrepositioner
 
 
@@ -54,8 +62,10 @@ class SweepMember:
     hparams: Dict[str, Any]
     submitted_at: float = 0.0
     launched_at: Optional[float] = None   # first step DONE
-    state: str = "pending"
+    state: str = "pending"     # pending -> held | running -> finished/failed
     result: Any = None
+    chips: int = 0                        # chips held while running
+    _ctx: Optional[Tuple] = field(default=None, repr=False)  # retry_held
 
     @property
     def launch_time(self) -> Optional[float]:
@@ -81,11 +91,16 @@ def carve_submeshes(devices: np.ndarray, n: int,
 
 
 class SweepSupervisor:
-    """Admission + dispatch for interactive sweeps on one device grid."""
+    """Admission + dispatch for interactive sweeps on one device grid.
+
+    Admission (quota) is the supervisor's job; dispatch goes through an
+    ExecBackend (repro.exec), mirroring the scheduler's JobLifecycle /
+    JobExecution split in Figure 3.
+    """
 
     def __init__(self, devices: Optional[np.ndarray] = None,
                  mesh_axes: Sequence[str] = ("data", "model"),
-                 max_chips: Optional[int] = None):
+                 max_chips: Optional[int] = None, backend=None):
         if devices is None:
             n = len(jax.devices())
             devices = np.asarray(jax.devices()).reshape(n, 1)
@@ -96,6 +111,16 @@ class SweepSupervisor:
         self.warmer = CompileCacheWarmer()
         self.weights = WeightPrepositioner()
         self.members: List[SweepMember] = []
+        self.events = EventLog()          # unified submit/dispatch stream
+        self._backend = backend           # default: InlineBackend (lazy)
+        self._sweeps = 0
+
+    @property
+    def backend(self):
+        if self._backend is None:
+            from repro.exec.inline import InlineBackend
+            self._backend = InlineBackend(sleep=False)
+        return self._backend
 
     # -- prepositioning (slow path, before the session) ---------------------
     def preposition(self, cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
@@ -115,25 +140,88 @@ class SweepSupervisor:
 
         run_member(compiled_entry, member) performs the member's first step
         (and any bookkeeping); launch time = submit -> first step done.
+
+        Members that clear the chip quota run as ONE task array on the
+        exec backend and end up "running" — still holding their chips
+        until release(). Members over quota end up "held"; call
+        retry_held() after releasing capacity to launch them.
         """
         n_chips = mesh.devices.size
         out: List[SweepMember] = []
+        admitted: List[SweepMember] = []
         for hp in grid:
             m = SweepMember(len(self.members), dict(hp),
                             submitted_at=time.monotonic())
+            m._ctx = (cfg, shape, mesh, run_member, n_chips)
             self.members.append(m)
             out.append(m)
+            self.events.emit(SUBMIT, m.submitted_at, task=m.mid,
+                             detail={"chips": n_chips})
             if not self.quota.try_acquire(n_chips):
                 m.state = "held"            # over quota: stays pending
                 continue
-            try:
-                entry = self.warmer.get(cfg, shape, mesh)   # NEVER compiles
-                m.result = run_member(entry, m)
-                m.launched_at = time.monotonic()
-                m.state = "running"
-            finally:
-                self.quota.release(n_chips)
+            m.chips = n_chips
+            admitted.append(m)
+        if admitted:
+            self._dispatch(admitted)
         return out
+
+    def retry_held(self) -> List[SweepMember]:
+        """Admission pass over held members (the retry the old
+        release-in-finally semantics made unreachable): launch every held
+        member the quota now admits; returns the ones launched."""
+        admitted: List[SweepMember] = []
+        for m in self.members:
+            if m.state != "held":
+                continue
+            cfg, shape, mesh, run_member, n_chips = m._ctx
+            if not self.quota.try_acquire(n_chips):
+                continue
+            m.chips = n_chips
+            m.state = "pending"
+            admitted.append(m)
+        if admitted:
+            self._dispatch(admitted)
+        return admitted
+
+    def release(self, member: SweepMember) -> None:
+        """End of the member's lifetime: return its chips. Idempotent."""
+        if member.state == "running":
+            member.state = "finished"
+        if member.chips:
+            self.quota.release(member.chips)
+            member.chips = 0
+
+    # -- dispatch through the exec protocol ---------------------------------
+    def _dispatch(self, admitted: List[SweepMember]) -> None:
+        """Submit the admitted members as one task array on the backend;
+        the gather layer gives per-member status and an array summary for
+        free (and its event stream lands in result.events)."""
+        from repro.taskarray import RetryPolicy, TaskGraph
+
+        def member_task(params, inputs):
+            m: SweepMember = params["member"]
+            cfg, shape, mesh, run_member, _ = m._ctx
+            entry = self.warmer.get(cfg, shape, mesh)   # NEVER compiles
+            m.result = run_member(entry, m)
+            m.launched_at = time.monotonic()
+            m.state = "running"
+            return m.result
+
+        self._sweeps += 1
+        g = TaskGraph(f"sweep{self._sweeps}")
+        g.map(member_task, [{"member": m} for m in admitted],
+              name=f"sweep{self._sweeps}")
+        res = self.backend.run_graph(g, RetryPolicy(max_retries=0))
+        arr = res[f"sweep{self._sweeps}"]
+        for m, r in zip(admitted, arr.results):
+            if r.status != "ok":            # launch failed: chips come back
+                m.state = "failed"
+                m.result = r.error
+                self.quota.release(m.chips)
+                m.chips = 0
+            self.events.emit(COMPLETE, r.finished_at or time.monotonic(),
+                             task=m.mid, ok=r.status == "ok")
 
     def launch_report(self) -> Dict[str, float]:
         times = [m.launch_time for m in self.members

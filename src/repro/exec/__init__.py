@@ -1,0 +1,72 @@
+"""repro.exec — the single execution-backend layer (ISSUE 7 tentpole).
+
+Every launch route in this repo goes through one seam:
+
+  ExecBackend     the protocol: launch(LaunchPlan) -> LaunchReport for
+                  one-shot launch-time measurement, run_graph(TaskGraph)
+                  -> GraphResult for many-task execution, close().
+  SimBackend      discrete-event TX-Green (core.scheduler + the §III
+                  launch strategies) — time simulated, values real.
+  ProcPoolBackend the persistent two-tier JSON-pipe worker pool on this
+                  host (the one home of the WORKER/LAUNCHER protocol,
+                  exec.pool), doubling as the one-shot real-process
+                  launch-time harness that core.realproc used to be.
+  InlineBackend   payloads run in this interpreter (shared jax devices /
+                  compile caches) — how launch.sweep submits.
+
+All backends speak the same structured event stream (exec.base.EventLog:
+submit/dispatch/ready/complete/retry timestamps), replacing the three
+incompatible stats shapes that used to live in LaunchResult,
+RealLaunchResult and the gather summaries. One seam = prepositioning,
+retry policy and telemetry are implemented once and apply to every
+execution route (sim, real processes, inline).
+
+The legacy names (taskarray.SimRunner/RealRunner/InlineRunner,
+core.realproc.compare) remain importable as deprecation shims.
+"""
+from __future__ import annotations
+
+from .base import (COMPLETE, DISPATCH, READY, RETRY, SUBMIT, BackendBase,
+                   EventLog, ExecBackend, ExecEvent, LaunchPlan, LaunchReport)
+from .pool import LAUNCHER_SRC, WORKER_SRC, ReadinessTimeout, WorkerPool
+
+_BACKENDS = {}
+
+
+def _backend_classes():
+    """Late import: backend modules import repro.taskarray, which imports
+    this package back through the runner shims — resolving them lazily
+    keeps `import repro.exec` acyclic."""
+    if not _BACKENDS:
+        from .inline import InlineBackend
+        from .procpool import ProcPoolBackend
+        from .sim import SimBackend
+        _BACKENDS.update({"sim": SimBackend, "procpool": ProcPoolBackend,
+                          "real": ProcPoolBackend, "inline": InlineBackend})
+    return _BACKENDS
+
+
+def get_backend(name: str, **kwargs) -> "ExecBackend":
+    """Factory: 'sim' | 'procpool' (alias 'real') | 'inline'."""
+    classes = _backend_classes()
+    if name not in classes:
+        raise KeyError(f"unknown backend {name!r}; "
+                       f"choose from {sorted(classes)}")
+    return classes[name](**kwargs)
+
+
+def __getattr__(name):
+    if name in ("SimBackend", "ProcPoolBackend", "InlineBackend"):
+        for cls in _backend_classes().values():
+            if cls.__name__ == name:
+                return cls
+    raise AttributeError(name)
+
+
+__all__ = [
+    "SUBMIT", "DISPATCH", "READY", "COMPLETE", "RETRY",
+    "ExecEvent", "EventLog", "LaunchPlan", "LaunchReport", "ExecBackend",
+    "BackendBase", "WORKER_SRC", "LAUNCHER_SRC", "WorkerPool",
+    "ReadinessTimeout", "SimBackend", "ProcPoolBackend", "InlineBackend",
+    "get_backend",
+]

@@ -1,0 +1,162 @@
+"""Shared backend contract: plans, reports, and the structured event stream.
+
+This module is import-pure (stdlib only) so every layer — core, taskarray,
+launch, benchmarks — can depend on it without cycles. A backend's clock is
+its own (simulated seconds for SimBackend, time.monotonic() for the real
+ones); events within one run are mutually comparable, never across runs.
+
+Event vocabulary (the timestamps the paper's Figures 4-7 are built from):
+
+  submit     work handed to the backend (an array, a launch plan)
+  dispatch   the backend put it on its launch path (scheduler dispatch op,
+             pipe write, inline call)
+  ready      a launched process/node reported up (launch-measurement runs)
+  complete   a task/launch reached a terminal state (`ok` says which)
+  retry      a failure retry or straggler duplicate was issued
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional, Protocol, \
+    runtime_checkable
+
+SUBMIT = "submit"
+DISPATCH = "dispatch"
+READY = "ready"
+COMPLETE = "complete"
+RETRY = "retry"
+
+
+@dataclass
+class ExecEvent:
+    kind: str                        # submit|dispatch|ready|complete|retry
+    t: float                         # backend clock
+    array: Optional[str] = None      # task-array name (graph runs)
+    task: Optional[int] = None       # task index within the array
+    attempt: int = 1
+    ok: Optional[bool] = None        # terminal outcome (complete events)
+    detail: Dict[str, Any] = field(default_factory=dict)
+
+
+class EventLog:
+    """Append-only, thread-safe event stream. ProcPoolBackend emits from
+    pipe-reader threads, so every mutation takes the lock; reads return
+    snapshots."""
+
+    def __init__(self):
+        self._events: List[ExecEvent] = []
+        self._lock = threading.Lock()
+
+    def emit(self, kind: str, t: float, **kw) -> ExecEvent:
+        ev = ExecEvent(kind, t, **kw)
+        with self._lock:
+            self._events.append(ev)
+        return ev
+
+    def of(self, *kinds: str) -> List[ExecEvent]:
+        with self._lock:
+            return [e for e in self._events if e.kind in kinds]
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        with self._lock:
+            for e in self._events:
+                out[e.kind] = out.get(e.kind, 0) + 1
+        return out
+
+    def span(self, *kinds: str) -> Optional[float]:
+        """Last-minus-first timestamp over the given kinds (all if none)."""
+        evs = self.of(*kinds) if kinds else list(self)
+        if not evs:
+            return None
+        ts = [e.t for e in evs]
+        return max(ts) - min(ts)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._events)
+
+    def __iter__(self) -> Iterator[ExecEvent]:
+        with self._lock:
+            return iter(list(self._events))
+
+
+@dataclass
+class LaunchPlan:
+    """One-shot 'bring up N_nodes x P processes' measurement request — the
+    unified form of what core.launcher strategies, core.realproc and the
+    sweep drivers each used to express privately."""
+    n_nodes: int
+    procs_per_node: int
+    app: str = "python"              # launch-cost profile (sim backend)
+    topology: str = "two-tier"       # flat | ssh-tree | two-tier
+    prepositioned: bool = True       # sim backend: local-disk deps staged
+
+    @property
+    def total_procs(self) -> int:
+        return self.n_nodes * self.procs_per_node
+
+
+@dataclass
+class LaunchReport:
+    """The one stats shape every backend returns from launch(): replaces
+    core.launcher.LaunchResult / core.realproc.RealLaunchResult / the
+    supervisor's ad-hoc dicts. `events` carries the per-node/process
+    submit/dispatch/ready timestamps the aggregate numbers derive from."""
+    backend: str
+    topology: str
+    n_nodes: int
+    procs_per_node: int
+    t_submit: float
+    t_ready: float                   # last process/node ready
+    events: EventLog = field(default_factory=EventLog, repr=False)
+
+    @property
+    def total_procs(self) -> int:
+        return self.n_nodes * self.procs_per_node
+
+    @property
+    def launch_time(self) -> float:
+        return self.t_ready - self.t_submit
+
+    @property
+    def launch_rate(self) -> float:
+        return self.total_procs / max(self.launch_time, 1e-9)
+
+    def row(self) -> Dict[str, Any]:
+        """Benchmark-friendly flat dict (what bench_* scripts emit)."""
+        return {"backend": self.backend, "topology": self.topology,
+                "nodes": self.n_nodes, "procs_per_node": self.procs_per_node,
+                "launch_s": round(self.launch_time, 4),
+                "rate_per_s": round(self.launch_rate, 1)}
+
+
+@runtime_checkable
+class ExecBackend(Protocol):
+    """What every execution route implements. `run_graph` takes a
+    repro.taskarray.TaskGraph and returns its GraphResult (with an
+    `.events` EventLog attached); `launch` measures a one-shot N x P
+    process bring-up. Backends are context managers; close() is
+    idempotent."""
+    name: str
+
+    def launch(self, plan: LaunchPlan) -> LaunchReport: ...
+
+    def run_graph(self, graph, policy=None): ...
+
+    def close(self) -> None: ...
+
+
+class BackendBase:
+    """Shared plumbing: context-manager protocol and a no-op close."""
+    name = "abstract"
+
+    def close(self) -> None:
+        pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,102 @@
+"""InlineBackend: execute a TaskGraph in THIS process, synchronously.
+
+The degenerate but load-bearing third backend: no simulation, no worker
+pool — fn payloads run right here, sharing the interpreter (and therefore
+jax devices, compile caches, prepositioned weights). This is how the
+hyperparameter sweep (launch.sweep, core.supervisor) submits its work as
+a TaskArray and still gets the gather layer: per-task status, bounded
+retries with backoff, and the unified event stream / summaries.
+
+Stragglers are not re-dispatched (one host, one interpreter — there is
+nowhere else to run), matching the supervisor's semantics. launch() is
+measured but trivial: "processes" are in-interpreter no-ops, so the
+report mostly serves protocol conformance.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from repro.taskarray.api import GraphResult, TaskGraph, eval_cmd, \
+    gather_inputs
+from repro.taskarray.dag import topo_order
+from repro.taskarray.gather import (FAILED, OK, ArrayResult, RetryPolicy,
+                                    TaskResult, summarize)
+
+from .base import (COMPLETE, DISPATCH, READY, RETRY, SUBMIT, BackendBase,
+                   EventLog, LaunchPlan, LaunchReport)
+
+
+class InlineBackend(BackendBase):
+    name = "inline"
+
+    def __init__(self, sleep: bool = True):
+        # sleep=False skips real backoff waits (unit tests)
+        self.sleep = sleep
+
+    def launch(self, plan: LaunchPlan) -> LaunchReport:
+        events = EventLog()
+        t0 = time.monotonic()
+        events.emit(SUBMIT, t0, detail={"topology": "inline"})
+        for i in range(plan.total_procs):
+            events.emit(READY, time.monotonic(), task=i)
+        return LaunchReport(backend=self.name, topology="inline",
+                            n_nodes=plan.n_nodes,
+                            procs_per_node=plan.procs_per_node,
+                            t_submit=t0, t_ready=time.monotonic(),
+                            events=events)
+
+    def run_graph(self, graph: TaskGraph,
+                  policy: Optional[RetryPolicy] = None) -> GraphResult:
+        policy = policy or RetryPolicy()
+        events = EventLog()
+        done = GraphResult()
+        done.events = events
+        for array in topo_order(graph.arrays):
+            inputs = gather_inputs(array, done)
+            t0 = time.monotonic()
+            events.emit(SUBMIT, t0, array=array.name,
+                        detail={"n_tasks": array.n_tasks})
+            results = []
+            t_dispatch = 0.0
+            for spec in array.tasks:
+                r = TaskResult(spec.index, submitted_at=time.monotonic())
+                events.emit(DISPATCH, r.submitted_at, array=array.name,
+                            task=spec.index)
+                while True:
+                    r.attempts += 1
+                    if r.attempts > 1:
+                        events.emit(RETRY, time.monotonic(),
+                                    array=array.name, task=spec.index,
+                                    attempt=r.attempts,
+                                    detail={"straggler": False})
+                    t1 = time.monotonic()
+                    try:
+                        if r.attempts <= spec.fail_attempts:
+                            raise RuntimeError(
+                                f"injected failure (attempt {r.attempts})")
+                        if array.fn is not None:
+                            r.value = array.fn(spec.params, inputs)
+                        else:
+                            r.value = eval_cmd(array.cmd, spec.params,
+                                               inputs, r.attempts)
+                        r.status = OK
+                        break
+                    except Exception as e:
+                        r.error = repr(e)
+                        if not policy.may_retry(r.attempts):
+                            r.status = FAILED
+                            break
+                        if self.sleep:
+                            time.sleep(policy.delay(r.attempts))
+                t_dispatch += time.monotonic() - t1
+                r.finished_at = time.monotonic()
+                events.emit(COMPLETE, r.finished_at, array=array.name,
+                            task=spec.index, attempt=r.attempts,
+                            ok=r.status == OK)
+                results.append(r)
+            done[array.name] = ArrayResult(
+                array.name, results,
+                summarize(array.name, results, t0, time.monotonic(),
+                          dispatch_seconds=max(t_dispatch, 1e-9)))
+        return done

@@ -1,0 +1,279 @@
+"""THE two-tier JSON-pipe WORKER/LAUNCHER protocol — defined exactly once.
+
+    parent --json--> launcher (xN) --json--> worker (xW each)
+
+Every real-process route in the repo speaks this protocol:
+
+  WorkerPool      persistent pool: launchers and workers stay alive, tasks
+                  stream over stdin/stdout JSON lines (the paper's T3
+                  topology reused for dispatch, not just launch). Used by
+                  exec.procpool.ProcPoolBackend (ex taskarray.RealRunner).
+  launch_once     one-shot launch-time measurement: bring the topology up,
+                  time submit -> last ready, tear it down. This is what
+                  core.realproc's flat/two-tier harness now routes through.
+
+Wire format (one JSON object per line):
+
+  worker  -> up      {"ready": true}
+  launcher-> up      {"ready": true, "workers": W}
+  parent  -> task    {"id": str, "expr": str, "params": {...},
+                      "inputs": ..., "attempt": int, "sleep": float}
+  worker  -> result  {"id": str, "ok": bool, "value"|"error": ...}
+
+Readiness is awaited with a TIMEOUT and failures tear the whole process
+tree down (try/finally) — a worker that never comes up may no longer leak
+its already-live siblings (ISSUE 7 satellite: the abandoned-children bug
+in the old realproc assert path).
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import threading
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from .base import READY, SUBMIT, EventLog, LaunchReport
+
+WORKER_SRC = r"""
+import json, math, random, sys, time
+sys.stdout.write(json.dumps({"ready": True}) + "\n")
+sys.stdout.flush()
+for line in sys.stdin:
+    msg = json.loads(line)
+    time.sleep(msg.get("sleep") or 0)           # straggler injection
+    env = {"params": msg.get("params") or {}, "inputs": msg.get("inputs"),
+           "attempt": msg.get("attempt", 1), "math": math,
+           "random": random, "time": time}
+    try:
+        out = {"id": msg["id"], "ok": True,
+               "value": eval(msg["expr"], env)}
+        json.dumps(out)                          # serializability check
+    except Exception as e:
+        out = {"id": msg["id"], "ok": False, "error": repr(e)}
+    sys.stdout.write(json.dumps(out) + "\n")
+    sys.stdout.flush()
+"""
+
+# One launcher per "node": forks W workers, then multiplexes task lines
+# from the parent onto free workers (a thread per worker serves a shared
+# queue) and funnels result lines back up a single locked stdout.
+LAUNCHER_SRC = r"""
+import json, queue, subprocess, sys, threading
+W = int(sys.argv[1])
+workers = [subprocess.Popen([sys.executable, "-c", %r],
+                            stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+                            text=True, bufsize=1)
+           for _ in range(W)]
+for w in workers:
+    assert json.loads(w.stdout.readline())["ready"]
+sys.stdout.write(json.dumps({"ready": True, "workers": W}) + "\n")
+sys.stdout.flush()
+q = queue.Queue()
+out_lock = threading.Lock()
+
+def serve(w):
+    while True:
+        line = q.get()
+        if line is None:
+            return
+        w.stdin.write(line)
+        w.stdin.flush()
+        res = w.stdout.readline()
+        with out_lock:
+            sys.stdout.write(res)
+            sys.stdout.flush()
+
+threads = [threading.Thread(target=serve, args=(w,), daemon=True)
+           for w in workers]
+for t in threads:
+    t.start()
+for line in sys.stdin:
+    q.put(line)
+for _ in workers:                                 # stdin closed: drain+stop
+    q.put(None)
+for t in threads:
+    t.join()
+for w in workers:
+    w.stdin.close()
+for w in workers:
+    w.wait()
+""" % WORKER_SRC
+
+
+class ReadinessTimeout(RuntimeError):
+    """A spawned process failed to report ready within the timeout."""
+
+
+def _spawn_worker() -> subprocess.Popen:
+    return subprocess.Popen([sys.executable, "-c", WORKER_SRC],
+                            stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+                            text=True, bufsize=1)
+
+
+def _spawn_launcher(workers: int) -> subprocess.Popen:
+    return subprocess.Popen([sys.executable, "-c", LAUNCHER_SRC,
+                             str(workers)],
+                            stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+                            text=True, bufsize=1)
+
+
+def teardown(procs: Sequence[subprocess.Popen]) -> None:
+    """Best-effort full reap: close stdin (graceful exit for protocol
+    speakers), then terminate/kill stragglers; every handle is wait()ed so
+    no zombies survive."""
+    for pr in procs:
+        try:
+            if pr.stdin:
+                pr.stdin.close()
+        except OSError:
+            pass
+    deadline = time.monotonic() + 5.0
+    for pr in procs:
+        try:
+            pr.wait(timeout=max(0.1, deadline - time.monotonic()))
+        except subprocess.TimeoutExpired:
+            pr.terminate()
+            try:
+                pr.wait(timeout=2.0)
+            except subprocess.TimeoutExpired:
+                pr.kill()
+                pr.wait()
+
+
+def await_ready(procs: Sequence[subprocess.Popen], timeout: float,
+                on_ready: Optional[Callable[[int, dict], None]] = None
+                ) -> None:
+    """Block until every proc emits its ready line; raise ReadinessTimeout
+    (after recording who failed) otherwise. One reader thread per proc so a
+    single hung child cannot block the wait past the deadline."""
+    status: List[Optional[dict]] = [None] * len(procs)
+
+    def read(i: int, pr: subprocess.Popen):
+        try:
+            line = pr.stdout.readline()
+            msg = json.loads(line) if line else {}
+        except Exception:
+            msg = {}
+        if msg.get("ready"):
+            status[i] = msg
+            if on_ready is not None:
+                on_ready(i, msg)
+
+    threads = [threading.Thread(target=read, args=(i, pr), daemon=True)
+               for i, pr in enumerate(procs)]
+    for t in threads:
+        t.start()
+    deadline = time.monotonic() + timeout
+    for t in threads:
+        t.join(timeout=max(0.0, deadline - time.monotonic()))
+    missing = [i for i, s in enumerate(status) if s is None]
+    if missing:
+        raise ReadinessTimeout(
+            f"{len(missing)}/{len(procs)} processes not ready within "
+            f"{timeout:.1f}s (indices {missing[:8]}...)")
+
+
+def launch_once(n_nodes: int, procs_per_node: int, *,
+                topology: str = "two-tier", timeout: float = 30.0
+                ) -> Tuple[LaunchReport, List[subprocess.Popen]]:
+    """One-shot real-process launch-time measurement (paper §III/§IV with
+    actual forks). Returns the unified LaunchReport plus the (fully reaped)
+    top-level Popen handles so callers/tests can verify cleanup.
+
+      flat      the parent forks every worker itself: N*P sequential
+                dispatch operations from one loop.
+      two-tier  ONE launcher per node; each launcher spawns its P workers
+                locally and reports when all are running (paper T3).
+    """
+    if topology not in ("flat", "two-tier"):
+        raise ValueError(f"real launch_once supports flat|two-tier, "
+                         f"got {topology!r}")
+    events = EventLog()
+    t0 = time.monotonic()
+    events.emit(SUBMIT, t0, detail={"topology": topology})
+    procs: List[subprocess.Popen] = []
+    try:
+        if topology == "flat":
+            for _ in range(n_nodes * procs_per_node):
+                procs.append(_spawn_worker())
+        else:
+            for _ in range(n_nodes):
+                procs.append(_spawn_launcher(procs_per_node))
+        await_ready(procs, timeout,
+                    on_ready=lambda i, msg: events.emit(
+                        READY, time.monotonic(), task=i))
+        t_ready = time.monotonic()
+    finally:
+        teardown(procs)              # also the error path: no orphans
+    return (LaunchReport(backend="procpool", topology=topology,
+                         n_nodes=n_nodes, procs_per_node=procs_per_node,
+                         t_submit=t0, t_ready=t_ready, events=events),
+            procs)
+
+
+class WorkerPool:
+    """The persistent two-tier pool. `submit` routes a task message to the
+    least-loaded launcher; results arrive on reader threads and are handed
+    to `on_result` (set by the backend). Thread-safe. If any launcher fails
+    to come up within `ready_timeout`, the whole tree is torn down before
+    the error propagates (no abandoned children)."""
+
+    def __init__(self, n_launchers: int = 2, workers_per_launcher: int = 4,
+                 ready_timeout: float = 30.0):
+        t0 = time.monotonic()
+        self.launchers: List[subprocess.Popen] = []
+        try:
+            for _ in range(n_launchers):
+                self.launchers.append(_spawn_launcher(workers_per_launcher))
+            await_ready(self.launchers, ready_timeout)
+        except BaseException:
+            teardown(self.launchers)
+            raise
+        self.launch_time = time.monotonic() - t0
+        self.n_workers = n_launchers * workers_per_launcher
+        self.on_result: Callable[[dict], None] = lambda msg: None
+        self._outstanding = [0] * n_launchers
+        self._lock = threading.Lock()
+        self._closed = False
+        self._readers = [threading.Thread(target=self._read, args=(i,),
+                                          daemon=True)
+                         for i in range(n_launchers)]
+        for t in self._readers:
+            t.start()
+
+    def _read(self, idx: int):
+        for line in self.launchers[idx].stdout:
+            with self._lock:
+                self._outstanding[idx] -= 1
+            self.on_result(json.loads(line))
+
+    def submit(self, msg: dict) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            idx = min(range(len(self.launchers)),
+                      key=lambda i: self._outstanding[i])
+            self._outstanding[idx] += 1
+            lp = self.launchers[idx]
+            lp.stdin.write(json.dumps(msg) + "\n")
+            lp.stdin.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        for lp in self.launchers:
+            lp.stdin.close()
+        for t in self._readers:
+            t.join()
+        for lp in self.launchers:
+            lp.wait()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

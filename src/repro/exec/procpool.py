@@ -1,0 +1,224 @@
+"""ProcPoolBackend: real OS processes behind the ExecBackend protocol.
+
+One backend, two duties (what used to be split — duplicated — between
+core.realproc and taskarray.runner_real):
+
+  run_graph   a persistent two-tier worker pool on this host: one
+              launcher per "node", W workers each, everything STAYS
+              ALIVE — tasks stream to workers over stdin/stdout JSON
+              lines instead of one fork per task. Launch cost is paid
+              once per session (the paper's preposition step);
+              steady-state dispatch is a pipe write.
+  launch      one-shot launch-time measurement (flat vs two-tier with
+              actual forks), delegating to exec.pool.launch_once.
+
+Payloads are `cmd` expression strings evaluated in the worker with
+`params`, `inputs`, `attempt`, `math`, `time`, `random` in scope; values
+travel back as JSON (so they must be JSON-serializable). fn payloads
+cannot cross the process boundary — graphs for this backend carry cmd.
+
+Gather runs in the parent: bounded retries with backoff (threading
+timers), straggler re-dispatch against the running-median duration, fault
+injection uniform with the sim backend.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Set
+
+from repro.taskarray.api import GraphResult, TaskArray, TaskGraph, \
+    gather_inputs
+from repro.taskarray.dag import topo_order
+from repro.taskarray.gather import (FAILED, OK, ArrayResult, RetryPolicy,
+                                    StragglerDetector, TaskResult, summarize)
+
+from .base import (COMPLETE, DISPATCH, RETRY, SUBMIT, BackendBase,
+                   EventLog, LaunchPlan, LaunchReport)
+from .pool import WorkerPool, launch_once
+
+
+class _ArrayRun:
+    """Wall-clock gather for one array: submit all, then watchdog loop
+    (straggler scan) until every task is terminal."""
+
+    def __init__(self, pool: WorkerPool, array: TaskArray, inputs,
+                 policy: RetryPolicy, events: EventLog):
+        if array.cmd is None:
+            raise ValueError(
+                f"array {array.name!r} has no cmd payload; ProcPoolBackend "
+                "workers are separate processes and cannot run fn callables")
+        self.pool = pool
+        self.array = array
+        self.inputs = inputs
+        self.policy = policy
+        self.events = events
+        self.results = [TaskResult(i) for i in range(array.n_tasks)]
+        self.detector = StragglerDetector(policy.straggler_k,
+                                          policy.min_straggler_samples)
+        self.straggler_redispatches = 0
+        self._dispatched_at = [0.0] * array.n_tasks
+        self._in_backoff: Set[int] = set()
+        self._timers: List[threading.Timer] = []
+        self._cond = threading.Condition()
+        self._terminal = 0
+        self.t0 = 0.0
+        self.dispatch_seconds = 0.0
+
+    def _msg(self, index: int, attempt: int) -> dict:
+        spec = self.array.tasks[index]
+        sleep = 0.0
+        if attempt == 1 and spec.straggle_factor > 1.0:
+            sleep = spec.work_seconds * (spec.straggle_factor - 1.0)
+        return {"id": f"{self.array.name}:{index}:{attempt}",
+                "expr": self.array.cmd, "params": spec.params,
+                "inputs": self.inputs, "attempt": attempt, "sleep": sleep}
+
+    def run(self) -> ArrayResult:
+        self.t0 = time.monotonic()
+        self.events.emit(SUBMIT, self.t0, array=self.array.name,
+                         detail={"n_tasks": self.array.n_tasks})
+        for i, r in enumerate(self.results):
+            r.attempts = 1
+            r.submitted_at = time.monotonic()
+            self._dispatched_at[i] = r.submitted_at
+            self.pool.submit(self._msg(i, 1))
+        self.dispatch_seconds = max(time.monotonic() - self.t0, 1e-9)
+        self.events.emit(DISPATCH, time.monotonic(), array=self.array.name,
+                         detail={"dispatch_s": self.dispatch_seconds})
+        with self._cond:
+            while self._terminal < len(self.results):
+                self._cond.wait(timeout=self.policy.scan_period)
+                self._scan_stragglers()
+        for t in self._timers:
+            t.cancel()
+        return ArrayResult(
+            self.array.name, self.results,
+            summarize(self.array.name, self.results, self.t0,
+                      time.monotonic(), dispatch_seconds=self.dispatch_seconds,
+                      straggler_redispatches=self.straggler_redispatches))
+
+    # called from pool reader threads
+    def on_result(self, index: int, attempt: int, msg: dict):
+        with self._cond:
+            r = self.results[index]
+            if r.terminal:
+                return                # straggler loser / stale retry
+            spec = self.array.tasks[index]
+            if msg.get("ok") and attempt > spec.fail_attempts:
+                r.status = OK
+                r.value = msg.get("value")
+                r.finished_at = time.monotonic()
+                self.detector.update(r.finished_at - r.submitted_at)
+                self.events.emit(COMPLETE, r.finished_at,
+                                 array=self.array.name, task=index,
+                                 attempt=attempt, ok=True)
+                self._terminal += 1
+            else:
+                r.error = (msg.get("error") if not msg.get("ok")
+                           else f"injected failure (attempt {attempt})")
+                if self.policy.may_retry(r.attempts):
+                    self._in_backoff.add(index)
+                    timer = threading.Timer(self.policy.delay(r.attempts),
+                                            self._retry, args=(index,))
+                    timer.daemon = True
+                    self._timers.append(timer)
+                    timer.start()
+                else:
+                    r.status = FAILED
+                    r.finished_at = time.monotonic()
+                    self.events.emit(COMPLETE, r.finished_at,
+                                     array=self.array.name, task=index,
+                                     attempt=attempt, ok=False,
+                                     detail={"error": r.error})
+                    self._terminal += 1
+            self._cond.notify_all()
+
+    def _retry(self, index: int):
+        with self._cond:
+            r = self.results[index]
+            if r.terminal:
+                return
+            self._in_backoff.discard(index)
+            r.attempts += 1
+            self._dispatched_at[index] = time.monotonic()
+            self.events.emit(RETRY, self._dispatched_at[index],
+                             array=self.array.name, task=index,
+                             attempt=r.attempts,
+                             detail={"straggler": False})
+            self.pool.submit(self._msg(index, r.attempts))
+
+    def _scan_stragglers(self):
+        # caller holds self._cond
+        thr = self.detector.threshold()
+        if thr is None:
+            return
+        now = time.monotonic()
+        for i, r in enumerate(self.results):
+            if r.terminal or r.redispatched or i in self._in_backoff:
+                continue
+            if now - self._dispatched_at[i] > thr:
+                r.redispatched = True
+                r.attempts += 1
+                self.straggler_redispatches += 1
+                self._dispatched_at[i] = now
+                self.events.emit(RETRY, now, array=self.array.name,
+                                 task=i, attempt=r.attempts,
+                                 detail={"straggler": True})
+                self.pool.submit(self._msg(i, r.attempts))
+
+
+class ProcPoolBackend(BackendBase):
+    """Runs TaskGraphs on this host through one persistent WorkerPool.
+    Arrays execute in topological order; the pool outlives every array (and
+    every graph), which is the whole point — dispatch without re-launch.
+    Close with .close() or use as a context manager."""
+
+    name = "procpool"
+
+    def __init__(self, n_launchers: int = 2, workers_per_launcher: int = 4,
+                 pool: Optional[WorkerPool] = None):
+        self._pool_args = (n_launchers, workers_per_launcher)
+        self.pool = pool
+        self._owns_pool = pool is None
+
+    def _ensure_pool(self) -> WorkerPool:
+        if self.pool is None:
+            self.pool = WorkerPool(*self._pool_args)
+        return self.pool
+
+    def launch(self, plan: LaunchPlan) -> LaunchReport:
+        """One-shot flat/two-tier launch-time measurement with real forks
+        (the old core.realproc harness). Spawns its own processes; the
+        persistent pool, if any, is untouched."""
+        report, _procs = launch_once(plan.n_nodes, plan.procs_per_node,
+                                     topology=plan.topology)
+        return report
+
+    def run_graph(self, graph: TaskGraph,
+                  policy: Optional[RetryPolicy] = None) -> GraphResult:
+        policy = policy or RetryPolicy()
+        pool = self._ensure_pool()
+        events = EventLog()
+        runs: Dict[str, _ArrayRun] = {}
+
+        def route(msg: dict):
+            name, index, attempt = msg["id"].rsplit(":", 2)
+            run = runs.get(name)
+            if run is not None:
+                run.on_result(int(index), int(attempt), msg)
+
+        pool.on_result = route
+        done = GraphResult()
+        done.events = events
+        for array in topo_order(graph.arrays):
+            run = _ArrayRun(pool, array, gather_inputs(array, done),
+                            policy, events)
+            runs[array.name] = run
+            done[array.name] = run.run()
+        return done
+
+    def close(self):
+        if self.pool is not None and self._owns_pool:
+            self.pool.close()
+            self.pool = None

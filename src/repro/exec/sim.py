@@ -1,0 +1,268 @@
+"""SimBackend: the discrete-event cluster behind the ExecBackend protocol.
+
+Wraps core.scheduler.Scheduler / core.cluster.Cluster and the §III launch
+strategies (core.launcher). Each ready array is submitted as ONE
+core.scheduler.ArrayJob (admitted and accounted like a Slurm job array);
+per-task completion events drive gather, bounded retries (cancellable Sim
+timers, exponential backoff) and straggler re-dispatch (periodic scan
+against k x running-median duration).
+
+Time is simulated — a 648-node, 100k-task run takes milliseconds of wall
+time — but VALUES are real: a task's fn/cmd payload is evaluated
+in-process at its completion event, so the same DAG produces the same
+answers here as on the ProcPoolBackend. That is what makes the sim backend
+a design tool: makespans, retry counts and dispatch rates for a planned
+campaign, with the actual analysis code in the loop.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Set
+
+from repro.core.cluster import Cluster, ClusterSpec, TX_GREEN
+from repro.core.events import Sim, Timer
+from repro.core.scheduler import AdmissionMode, JobState, Scheduler, \
+    UserLimits
+from repro.taskarray.api import GraphResult, TaskArray, TaskGraph, \
+    eval_cmd, gather_inputs
+from repro.taskarray.dag import ready_set
+from repro.taskarray.gather import (FAILED, OK, ArrayResult, RetryPolicy,
+                                    StragglerDetector, TaskResult, summarize)
+
+from .base import (COMPLETE, DISPATCH, READY, RETRY, SUBMIT, BackendBase,
+                   EventLog, LaunchPlan, LaunchReport)
+
+
+class _ArrayRun:
+    """State machine for one array inside the sim: dispatch -> per-task
+    completion events -> retries / straggler duplicates -> summary."""
+
+    def __init__(self, backend: "SimBackend", sched: Scheduler,
+                 array: TaskArray, inputs, policy: RetryPolicy,
+                 events: EventLog,
+                 on_complete: Callable[[ArrayResult], None]):
+        self.backend = backend
+        self.sim = sched.sim
+        self.sched = sched
+        self.array = array
+        self.inputs = inputs
+        self.policy = policy
+        self.events = events
+        self.on_complete = on_complete
+        self.results = [TaskResult(i) for i in range(array.n_tasks)]
+        self.detector = StragglerDetector(policy.straggler_k,
+                                          policy.min_straggler_samples)
+        self.straggler_redispatches = 0
+        self._dispatched_at = [0.0] * array.n_tasks
+        self._in_backoff: Set[int] = set()
+        self._terminal = 0
+        self._scan_timer: Optional[Timer] = None
+        self.t0 = self.sim.now
+        self.job = None
+
+    # ---- dispatch ----------------------------------------------------
+    def submit(self):
+        # attempt 1 runs at straggle_factor x work: a slow NODE, so any
+        # re-dispatched attempt gets nominal work elsewhere
+        work = [t.work_seconds * t.straggle_factor for t in self.array.tasks]
+        for r in self.results:
+            r.attempts = 1
+            r.submitted_at = self.sim.now
+        self._dispatched_at = [self.sim.now] * self.array.n_tasks
+        self.events.emit(SUBMIT, self.sim.now, array=self.array.name,
+                         detail={"n_tasks": self.array.n_tasks})
+        self.job = self.sched.submit_array(
+            self.backend.user, self.array.app, work,
+            self.array.procs_per_task, attempt=1,
+            max_nodes=self.backend.max_nodes, task_done=self._task_done)
+        self.events.emit(DISPATCH, self.sim.now, array=self.array.name,
+                         detail={"n_nodes": self.job.n_nodes})
+        self._scan_timer = self.sim.schedule(self.policy.scan_period,
+                                             self._scan)
+
+    def _resubmit(self, index: int, attempt: int, straggler: bool = False):
+        """One-task follow-up array (retry or straggler duplicate)."""
+        spec = self.array.tasks[index]
+        self._dispatched_at[index] = self.sim.now
+        self.events.emit(RETRY, self.sim.now, array=self.array.name,
+                         task=index, attempt=attempt,
+                         detail={"straggler": straggler})
+        self.sched.submit_array(
+            self.backend.user, self.array.app, [spec.work_seconds],
+            self.array.procs_per_task, attempt=attempt, max_nodes=1,
+            task_done=lambda _i, a, t: self._task_done(index, a, t))
+
+    # ---- completion / retry / straggler ------------------------------
+    def _task_done(self, index: int, attempt: int, t: float):
+        r = self.results[index]
+        if r.terminal:
+            return                    # straggler loser or stale retry
+        spec = self.array.tasks[index]
+        if attempt <= spec.fail_attempts:
+            self._on_failure(index, attempt,
+                             f"injected failure (attempt {attempt})", t)
+            return
+        try:
+            if self.array.fn is not None:
+                value = self.array.fn(spec.params, self.inputs)
+            else:
+                value = eval_cmd(self.array.cmd, spec.params, self.inputs,
+                                 attempt)
+        except Exception as e:          # payload bug: real failure path
+            self._on_failure(index, attempt, repr(e), t)
+            return
+        r.status = OK
+        r.value = value
+        r.finished_at = t
+        self.detector.update(t - r.submitted_at)
+        self.events.emit(COMPLETE, t, array=self.array.name, task=index,
+                         attempt=attempt, ok=True)
+        self._finish_one()
+
+    def _on_failure(self, index: int, attempt: int, error: str, t: float):
+        r = self.results[index]
+        r.error = error
+        retry_number = r.attempts       # retries consumed so far + this one
+        if self.policy.may_retry(retry_number):
+            self._in_backoff.add(index)
+            self.sim.schedule(self.policy.delay(retry_number),
+                              lambda: self._retry(index))
+        else:
+            r.status = FAILED
+            r.finished_at = t
+            self.events.emit(COMPLETE, t, array=self.array.name, task=index,
+                             attempt=attempt, ok=False,
+                             detail={"error": error})
+            self._finish_one()
+
+    def _retry(self, index: int):
+        r = self.results[index]
+        if r.terminal:
+            return
+        self._in_backoff.discard(index)
+        r.attempts += 1
+        self._resubmit(index, r.attempts)
+
+    def _scan(self):
+        """Periodic straggler scan: any running task whose elapsed time
+        exceeds k x median gets ONE duplicate dispatch; first completion
+        wins, the loser's event is ignored."""
+        if self._terminal >= len(self.results):
+            return
+        thr = self.detector.threshold()
+        if thr is not None:
+            for i, r in enumerate(self.results):
+                if (r.terminal or r.redispatched
+                        or i in self._in_backoff):
+                    continue
+                if self.sim.now - self._dispatched_at[i] > thr:
+                    r.redispatched = True
+                    r.attempts += 1
+                    self.straggler_redispatches += 1
+                    self.sched.stats.straggler_redispatches += 1
+                    self._resubmit(i, r.attempts, straggler=True)
+        self._scan_timer = self.sim.schedule(self.policy.scan_period,
+                                             self._scan)
+
+    def _finish_one(self):
+        self._terminal += 1
+        if self._terminal == len(self.results):
+            self.sim.cancel(self._scan_timer)
+            launch = self.job.launch
+            summary = summarize(
+                self.array.name, self.results, self.t0, self.sim.now,
+                dispatch_seconds=launch.launch_time if launch else None,
+                straggler_redispatches=self.straggler_redispatches)
+            self.on_complete(ArrayResult(self.array.name, self.results,
+                                         summary))
+
+
+class SimBackend(BackendBase):
+    """Runs TaskGraphs / launch plans on the simulated cluster (default:
+    TX-Green, 648 nodes, two-tier dispatch). Independent DAG branches
+    overlap in sim time; each completing array unblocks its dependents
+    immediately."""
+
+    name = "sim"
+
+    def __init__(self, spec: ClusterSpec = TX_GREEN,
+                 strategy: str = "two-tier", prepositioned: bool = True,
+                 max_nodes: Optional[int] = None, user: str = "analyst"):
+        self.spec = spec
+        self.strategy = strategy
+        self.prepositioned = prepositioned
+        self.max_nodes = max_nodes
+        self.user = user
+        self.sched: Optional[Scheduler] = None   # exposed for inspection
+
+    # ------------------------------------------------------------------
+    def _make_sched(self, sim: Sim, apps) -> Scheduler:
+        cluster = Cluster(sim, self.spec)
+        if self.prepositioned:
+            for app in apps:
+                cluster.preposition(app)
+        whole = UserLimits(max_cores=self.spec.total_cores,
+                           max_jobs=1 << 30, max_pending=1 << 30)
+        return Scheduler(sim, cluster, mode=AdmissionMode.ON_DEMAND,
+                         strategy=self.strategy, default_limits=whole)
+
+    def launch(self, plan: LaunchPlan) -> LaunchReport:
+        """Simulate one interactive launch on an idle cluster; the report's
+        event stream carries per-node ready times (Figures 4-7 fodder)."""
+        sim = Sim()
+        cluster = Cluster(sim, self.spec)
+        if plan.prepositioned:
+            cluster.preposition(plan.app)
+        whole = UserLimits(max_cores=self.spec.total_cores,
+                           max_jobs=1 << 30, max_pending=1 << 30)
+        strategy = plan.topology or self.strategy
+        sched = Scheduler(sim, cluster, mode=AdmissionMode.ON_DEMAND,
+                          strategy=strategy, default_limits=whole)
+        events = EventLog()
+        events.emit(SUBMIT, sim.now, detail={"topology": strategy})
+        job = sched.submit(self.user, plan.app, plan.n_nodes,
+                           plan.procs_per_node)
+        sched.run()
+        assert job.state == JobState.COMPLETED, job.state
+        lr = job.launch
+        events.emit(DISPATCH, job.started_at)
+        for i, t in enumerate(lr.per_node_done):
+            events.emit(READY, t, task=i)
+        events.emit(COMPLETE, job.finished_at, ok=True)
+        return LaunchReport(backend=self.name, topology=strategy,
+                            n_nodes=plan.n_nodes,
+                            procs_per_node=plan.procs_per_node,
+                            t_submit=lr.t_submit, t_ready=lr.t_all_running,
+                            events=events)
+
+    def run_graph(self, graph: TaskGraph,
+                  policy: Optional[RetryPolicy] = None) -> GraphResult:
+        policy = policy or RetryPolicy()
+        sim = Sim()
+        self.sched = self._make_sched(sim, {a.app for a in graph.arrays})
+        events = EventLog()
+        done = GraphResult()
+        done.events = events
+        done_arrays: List[TaskArray] = []
+        submitted: Set[str] = set()
+
+        def pump():
+            for arr in ready_set(graph.arrays, done_arrays):
+                if arr.name in submitted:
+                    continue
+                submitted.add(arr.name)
+                run = _ArrayRun(self, self.sched, arr,
+                                gather_inputs(arr, done), policy, events,
+                                lambda res, a=arr: complete(a, res))
+                run.submit()
+
+        def complete(arr: TaskArray, res: ArrayResult):
+            done[arr.name] = res
+            done_arrays.append(arr)
+            pump()
+
+        pump()
+        sim.run()
+        if len(done) != len(graph.arrays):
+            stuck = [a.name for a in graph.arrays if a.name not in done]
+            raise RuntimeError(f"graph stalled; incomplete arrays: {stuck}")
+        return done

@@ -32,7 +32,8 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import abstract_params, forward_loss, init_params
 from repro.optim import adamw_init, adamw_update
 from repro.parallel import param_specs
-from repro.taskarray import InlineRunner, RetryPolicy, TaskGraph
+from repro.exec import get_backend
+from repro.taskarray import RetryPolicy, TaskGraph
 
 
 def build_member_step(cfg, mesh):
@@ -88,19 +89,23 @@ def main():
                 params, opt, b, jnp.float32(member.hparams["lr"]))
         return float(loss)
 
-    # the sweep IS a task array: one task per member, gathered with
+    # the sweep IS a task array: one task per member, submitted through
+    # the unified exec backend layer (repro.exec) and gathered with
     # per-task status/retries and an array-level launch summary
     def member_fn(params, inputs):
         [m] = sup.launch_sweep(cfg, shape, mesh, [params], run_member)
         if m.state == "held":
             raise RuntimeError("held: over chip quota")
+        sup.release(m)          # steps done -> member's lifetime ends
         return {"lr": params["lr"], "loss": m.result,
                 "launch_s": m.launch_time}
 
     graph = TaskGraph("hparam-sweep")
     graph.map(member_fn, grid, name="sweep")
     t0 = time.monotonic()
-    arr = graph.run(InlineRunner(), RetryPolicy(max_retries=0))["sweep"]
+    backend = get_backend("inline")
+    res = graph.run(backend, RetryPolicy(max_retries=0))
+    arr = res["sweep"]
     dt = time.monotonic() - t0
     ran = [v for v in arr.values if v is not None]
     best = min(ran, key=lambda v: v["loss"]) if ran else None
@@ -112,6 +117,7 @@ def main():
         print(f"best member: lr={best['lr']:.2e} "
               f"loss={best['loss']:.4f} launch={1e3*best['launch_s']:.0f}ms")
     print(f"array: {arr.summary}")
+    print(f"events: {res.events.counts()}")
     print(f"report: {sup.launch_report()}")
 
 

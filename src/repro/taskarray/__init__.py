@@ -1,20 +1,42 @@
 """Many-task orchestration (LLMapReduce-style): job arrays + DAGs + gather.
 
-The layer between the launch machinery (core.scheduler / core.realproc)
-and the workloads (sweep, serve, train): express "run these N
-parameterized tasks, respecting dependencies, gathering results, retrying
-failures, re-dispatching stragglers" once, then execute it on a simulated
-648-node cluster (SimRunner), a persistent real-process worker pool
-(RealRunner), or inline in this interpreter (InlineRunner).
+The layer between the launch machinery (core.scheduler / repro.exec) and
+the workloads (sweep, serve, train): express "run these N parameterized
+tasks, respecting dependencies, gathering results, retrying failures,
+re-dispatching stragglers" once, then execute it on any repro.exec
+backend — a simulated 648-node cluster (SimBackend), a persistent
+real-process worker pool (ProcPoolBackend), or inline in this interpreter
+(InlineBackend).
+
+SimRunner / RealRunner / InlineRunner / WorkerPool remain as deprecation
+shims over those backends (resolved lazily to keep the taskarray <->
+exec import graph acyclic).
 """
 from .api import (GraphResult, TaskArray, TaskGraph, TaskSpec, eval_cmd,
                   gather_inputs)
 from .dag import CycleError, ready_set, topo_order
 from .gather import (ArrayResult, ArraySummary, RetryPolicy,
                      StragglerDetector, TaskResult, summarize)
-from .runner_inline import InlineRunner
-from .runner_real import RealRunner, WorkerPool
-from .runner_sim import SimRunner
+
+_LAZY = {
+    "InlineRunner": "runner_inline",
+    "RealRunner": "runner_real",
+    "WorkerPool": "runner_real",
+    "SimRunner": "runner_sim",
+}
+
+
+def __getattr__(name):
+    """Runner shims import repro.exec, whose backends import this package
+    back — resolving them on first access keeps both import orders legal."""
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        value = getattr(mod, name)
+        globals()[name] = value
+        return value
+    raise AttributeError(name)
+
 
 __all__ = [
     "GraphResult", "TaskArray", "TaskGraph", "TaskSpec", "eval_cmd",

@@ -1,68 +1,18 @@
-"""Inline runner: execute a TaskGraph in THIS process, synchronously.
+"""Deprecation shim: InlineRunner now lives in repro.exec.inline.
 
-The degenerate but load-bearing third runner: no simulation, no worker
-pool — fn payloads run right here, sharing the interpreter (and therefore
-jax devices, compile caches, prepositioned weights). This is how the
-hyperparameter sweep (launch.sweep) and future serving/training drivers
-submit their work as a TaskArray and still get the gather layer: per-task
-status, bounded retries with backoff, and an ArraySummary launch report.
-
-Stragglers are not re-dispatched (one host, one interpreter — there is
-nowhere else to run), matching the supervisor's semantics.
+The in-interpreter execution path moved to the unified execution layer
+(repro.exec) alongside the sim and real-process backends. `InlineRunner`
+remains as a thin alias so existing imports keep working; new code should
+use `repro.exec.InlineBackend` (or `repro.exec.get_backend("inline")`).
 """
 from __future__ import annotations
 
-import time
-from typing import Optional
-
-from .api import GraphResult, TaskGraph, eval_cmd, gather_inputs
-from .dag import topo_order
-from .gather import (FAILED, OK, ArrayResult, RetryPolicy, TaskResult,
-                     summarize)
+from repro.exec.inline import InlineBackend
 
 
-class InlineRunner:
-    def __init__(self, sleep: bool = True):
-        # sleep=False skips real backoff waits (unit tests)
-        self.sleep = sleep
+class InlineRunner(InlineBackend):
+    """Legacy name for repro.exec.inline.InlineBackend (same constructor:
+    sleep=True)."""
 
-    def run_graph(self, graph: TaskGraph,
-                  policy: Optional[RetryPolicy] = None) -> GraphResult:
-        policy = policy or RetryPolicy()
-        done = GraphResult()
-        for array in topo_order(graph.arrays):
-            inputs = gather_inputs(array, done)
-            t0 = time.monotonic()
-            results = []
-            t_dispatch = 0.0
-            for spec in array.tasks:
-                r = TaskResult(spec.index, submitted_at=time.monotonic())
-                while True:
-                    r.attempts += 1
-                    t1 = time.monotonic()
-                    try:
-                        if r.attempts <= spec.fail_attempts:
-                            raise RuntimeError(
-                                f"injected failure (attempt {r.attempts})")
-                        if array.fn is not None:
-                            r.value = array.fn(spec.params, inputs)
-                        else:
-                            r.value = eval_cmd(array.cmd, spec.params,
-                                               inputs, r.attempts)
-                        r.status = OK
-                        break
-                    except Exception as e:
-                        r.error = repr(e)
-                        if not policy.may_retry(r.attempts):
-                            r.status = FAILED
-                            break
-                        if self.sleep:
-                            time.sleep(policy.delay(r.attempts))
-                t_dispatch += time.monotonic() - t1
-                r.finished_at = time.monotonic()
-                results.append(r)
-            done[array.name] = ArrayResult(
-                array.name, results,
-                summarize(array.name, results, t0, time.monotonic(),
-                          dispatch_seconds=max(t_dispatch, 1e-9)))
-        return done
+
+__all__ = ["InlineRunner"]

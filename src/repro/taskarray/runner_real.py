@@ -1,324 +1,22 @@
-"""Real-process runner: a persistent two-tier worker pool on this host.
+"""Deprecation shim: RealRunner now lives in repro.exec.procpool.
 
-core.realproc validates the paper's T3 topology for *launch*; this module
-reuses it for *dispatch*: the pool forks one LAUNCHER per simulated node,
-each launcher forks W workers, and then everything STAYS ALIVE — tasks
-stream to workers over stdin/stdout JSON lines instead of one fork per
-task. Launch cost is paid once per session (the paper's preposition step);
-steady-state dispatch is a pipe write.
-
-    parent --json--> launcher (xN) --json--> worker (xW each)
-
-Payloads are `cmd` expression strings evaluated in the worker with
-`params`, `inputs`, `attempt`, `math`, `time`, `random` in scope; values
-travel back as JSON (so they must be JSON-serializable). fn payloads
-cannot cross the process boundary — graphs for this runner carry cmd.
-
-Gather runs in the parent: bounded retries with backoff (threading timers),
-straggler re-dispatch against the running-median duration, fault injection
-uniform with the sim runner (TaskSpec.fail_attempts fails early attempts
-at gather time; TaskSpec.straggle_factor stretches attempt 1 by an
-injected worker-side sleep).
+The persistent two-tier JSON-pipe pool and its WORKER/LAUNCHER protocol
+moved to the unified execution layer: the protocol strings and WorkerPool
+are defined once in repro.exec.pool (also serving core.realproc's one-shot
+launch measurement), and the graph-execution machinery is
+repro.exec.procpool.ProcPoolBackend. `RealRunner` / `WorkerPool` remain
+as thin aliases so existing imports keep working; new code should use
+`repro.exec.ProcPoolBackend` (or `repro.exec.get_backend("procpool")`).
 """
 from __future__ import annotations
 
-import json
-import subprocess
-import sys
-import threading
-import time
-from typing import Callable, Dict, List, Optional, Set
-
-from .api import GraphResult, TaskArray, TaskGraph, gather_inputs
-from .dag import topo_order
-from .gather import (FAILED, OK, ArrayResult, RetryPolicy, StragglerDetector,
-                     TaskResult, summarize)
-
-_WORKER_SRC = r"""
-import json, math, random, sys, time
-sys.stdout.write(json.dumps({"ready": True}) + "\n")
-sys.stdout.flush()
-for line in sys.stdin:
-    msg = json.loads(line)
-    time.sleep(msg.get("sleep") or 0)           # straggler injection
-    env = {"params": msg.get("params") or {}, "inputs": msg.get("inputs"),
-           "attempt": msg.get("attempt", 1), "math": math,
-           "random": random, "time": time}
-    try:
-        out = {"id": msg["id"], "ok": True,
-               "value": eval(msg["expr"], env)}
-        json.dumps(out)                          # serializability check
-    except Exception as e:
-        out = {"id": msg["id"], "ok": False, "error": repr(e)}
-    sys.stdout.write(json.dumps(out) + "\n")
-    sys.stdout.flush()
-"""
-
-# One launcher per "node": forks W workers, then multiplexes task lines
-# from the parent onto free workers (a thread per worker serves a shared
-# queue) and funnels result lines back up a single locked stdout.
-_LAUNCHER_SRC = r"""
-import json, queue, subprocess, sys, threading
-W = int(sys.argv[1])
-workers = [subprocess.Popen([sys.executable, "-c", %r],
-                            stdin=subprocess.PIPE, stdout=subprocess.PIPE,
-                            text=True, bufsize=1)
-           for _ in range(W)]
-for w in workers:
-    assert json.loads(w.stdout.readline())["ready"]
-sys.stdout.write(json.dumps({"ready": True, "workers": W}) + "\n")
-sys.stdout.flush()
-q = queue.Queue()
-out_lock = threading.Lock()
-
-def serve(w):
-    while True:
-        line = q.get()
-        if line is None:
-            return
-        w.stdin.write(line)
-        w.stdin.flush()
-        res = w.stdout.readline()
-        with out_lock:
-            sys.stdout.write(res)
-            sys.stdout.flush()
-
-threads = [threading.Thread(target=serve, args=(w,), daemon=True)
-           for w in workers]
-for t in threads:
-    t.start()
-for line in sys.stdin:
-    q.put(line)
-for _ in workers:                                 # stdin closed: drain+stop
-    q.put(None)
-for t in threads:
-    t.join()
-for w in workers:
-    w.stdin.close()
-for w in workers:
-    w.wait()
-""" % _WORKER_SRC
+from repro.exec.pool import WorkerPool
+from repro.exec.procpool import ProcPoolBackend
 
 
-class WorkerPool:
-    """The persistent two-tier pool. `submit` routes a task message to the
-    least-loaded launcher; results arrive on reader threads and are handed
-    to `on_result` (set by the runner). Thread-safe."""
-
-    def __init__(self, n_launchers: int = 2, workers_per_launcher: int = 4):
-        t0 = time.monotonic()
-        self.launchers = [subprocess.Popen(
-            [sys.executable, "-c", _LAUNCHER_SRC, str(workers_per_launcher)],
-            stdin=subprocess.PIPE, stdout=subprocess.PIPE,
-            text=True, bufsize=1)
-            for _ in range(n_launchers)]
-        for lp in self.launchers:
-            ready = json.loads(lp.stdout.readline())
-            assert ready["ready"] and ready["workers"] == workers_per_launcher
-        self.launch_time = time.monotonic() - t0
-        self.n_workers = n_launchers * workers_per_launcher
-        self.on_result: Callable[[dict], None] = lambda msg: None
-        self._outstanding = [0] * n_launchers
-        self._lock = threading.Lock()
-        self._closed = False
-        self._readers = [threading.Thread(target=self._read, args=(i,),
-                                          daemon=True)
-                         for i in range(n_launchers)]
-        for t in self._readers:
-            t.start()
-
-    def _read(self, idx: int):
-        for line in self.launchers[idx].stdout:
-            with self._lock:
-                self._outstanding[idx] -= 1
-            self.on_result(json.loads(line))
-
-    def submit(self, msg: dict) -> None:
-        with self._lock:
-            if self._closed:
-                return
-            idx = min(range(len(self.launchers)),
-                      key=lambda i: self._outstanding[i])
-            self._outstanding[idx] += 1
-            lp = self.launchers[idx]
-            lp.stdin.write(json.dumps(msg) + "\n")
-            lp.stdin.flush()
-
-    def close(self) -> None:
-        with self._lock:
-            if self._closed:
-                return
-            self._closed = True
-        for lp in self.launchers:
-            lp.stdin.close()
-        for t in self._readers:
-            t.join()
-        for lp in self.launchers:
-            lp.wait()
-
-    def __enter__(self):
-        return self
-
-    def __exit__(self, *exc):
-        self.close()
+class RealRunner(ProcPoolBackend):
+    """Legacy name for repro.exec.procpool.ProcPoolBackend (same
+    constructor: n_launchers/workers_per_launcher/pool)."""
 
 
-class _RealArrayRun:
-    """Wall-clock gather for one array: submit all, then watchdog loop
-    (straggler scan) until every task is terminal."""
-
-    def __init__(self, pool: WorkerPool, array: TaskArray, inputs,
-                 policy: RetryPolicy):
-        if array.cmd is None:
-            raise ValueError(
-                f"array {array.name!r} has no cmd payload; RealRunner "
-                "workers are separate processes and cannot run fn callables")
-        self.pool = pool
-        self.array = array
-        self.inputs = inputs
-        self.policy = policy
-        self.results = [TaskResult(i) for i in range(array.n_tasks)]
-        self.detector = StragglerDetector(policy.straggler_k,
-                                          policy.min_straggler_samples)
-        self.straggler_redispatches = 0
-        self._dispatched_at = [0.0] * array.n_tasks
-        self._in_backoff: Set[int] = set()
-        self._timers: List[threading.Timer] = []
-        self._cond = threading.Condition()
-        self._terminal = 0
-        self.t0 = 0.0
-        self.dispatch_seconds = 0.0
-
-    def _msg(self, index: int, attempt: int) -> dict:
-        spec = self.array.tasks[index]
-        sleep = 0.0
-        if attempt == 1 and spec.straggle_factor > 1.0:
-            sleep = spec.work_seconds * (spec.straggle_factor - 1.0)
-        return {"id": f"{self.array.name}:{index}:{attempt}",
-                "expr": self.array.cmd, "params": spec.params,
-                "inputs": self.inputs, "attempt": attempt, "sleep": sleep}
-
-    def run(self) -> ArrayResult:
-        self.t0 = time.monotonic()
-        for i, r in enumerate(self.results):
-            r.attempts = 1
-            r.submitted_at = time.monotonic()
-            self._dispatched_at[i] = r.submitted_at
-            self.pool.submit(self._msg(i, 1))
-        self.dispatch_seconds = max(time.monotonic() - self.t0, 1e-9)
-        with self._cond:
-            while self._terminal < len(self.results):
-                self._cond.wait(timeout=self.policy.scan_period)
-                self._scan_stragglers()
-        for t in self._timers:
-            t.cancel()
-        return ArrayResult(
-            self.array.name, self.results,
-            summarize(self.array.name, self.results, self.t0,
-                      time.monotonic(), dispatch_seconds=self.dispatch_seconds,
-                      straggler_redispatches=self.straggler_redispatches))
-
-    # called from pool reader threads
-    def on_result(self, index: int, attempt: int, msg: dict):
-        with self._cond:
-            r = self.results[index]
-            if r.terminal:
-                return                # straggler loser / stale retry
-            spec = self.array.tasks[index]
-            if msg.get("ok") and attempt > spec.fail_attempts:
-                r.status = OK
-                r.value = msg.get("value")
-                r.finished_at = time.monotonic()
-                self.detector.update(r.finished_at - r.submitted_at)
-                self._terminal += 1
-            else:
-                r.error = (msg.get("error") if not msg.get("ok")
-                           else f"injected failure (attempt {attempt})")
-                if self.policy.may_retry(r.attempts):
-                    self._in_backoff.add(index)
-                    timer = threading.Timer(self.policy.delay(r.attempts),
-                                            self._retry, args=(index,))
-                    timer.daemon = True
-                    self._timers.append(timer)
-                    timer.start()
-                else:
-                    r.status = FAILED
-                    r.finished_at = time.monotonic()
-                    self._terminal += 1
-            self._cond.notify_all()
-
-    def _retry(self, index: int):
-        with self._cond:
-            r = self.results[index]
-            if r.terminal:
-                return
-            self._in_backoff.discard(index)
-            r.attempts += 1
-            self._dispatched_at[index] = time.monotonic()
-            self.pool.submit(self._msg(index, r.attempts))
-
-    def _scan_stragglers(self):
-        # caller holds self._cond
-        thr = self.detector.threshold()
-        if thr is None:
-            return
-        now = time.monotonic()
-        for i, r in enumerate(self.results):
-            if r.terminal or r.redispatched or i in self._in_backoff:
-                continue
-            if now - self._dispatched_at[i] > thr:
-                r.redispatched = True
-                r.attempts += 1
-                self.straggler_redispatches += 1
-                self._dispatched_at[i] = now
-                self.pool.submit(self._msg(i, r.attempts))
-
-
-class RealRunner:
-    """Runs a TaskGraph on this host through one persistent WorkerPool.
-    Arrays execute in topological order; the pool outlives every array (and
-    every graph), which is the whole point — dispatch without re-launch.
-    Close with .close() or use as a context manager."""
-
-    def __init__(self, n_launchers: int = 2, workers_per_launcher: int = 4,
-                 pool: Optional[WorkerPool] = None):
-        self._pool_args = (n_launchers, workers_per_launcher)
-        self.pool = pool
-        self._owns_pool = pool is None
-
-    def _ensure_pool(self) -> WorkerPool:
-        if self.pool is None:
-            self.pool = WorkerPool(*self._pool_args)
-        return self.pool
-
-    def run_graph(self, graph: TaskGraph,
-                  policy: Optional[RetryPolicy] = None) -> GraphResult:
-        policy = policy or RetryPolicy()
-        pool = self._ensure_pool()
-        runs: Dict[str, _RealArrayRun] = {}
-
-        def route(msg: dict):
-            name, index, attempt = msg["id"].rsplit(":", 2)
-            run = runs.get(name)
-            if run is not None:
-                run.on_result(int(index), int(attempt), msg)
-
-        pool.on_result = route
-        done = GraphResult()
-        for array in topo_order(graph.arrays):
-            run = _RealArrayRun(pool, array, gather_inputs(array, done),
-                                policy)
-            runs[array.name] = run
-            done[array.name] = run.run()
-        return done
-
-    def close(self):
-        if self.pool is not None and self._owns_pool:
-            self.pool.close()
-            self.pool = None
-
-    def __enter__(self):
-        return self
-
-    def __exit__(self, *exc):
-        self.close()
+__all__ = ["RealRunner", "WorkerPool"]

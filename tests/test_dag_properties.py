@@ -1,0 +1,90 @@
+"""Property tests for taskarray.dag: topo order, ready sets, cycles.
+
+Random DAGs are generated with edges only from lower to higher index
+(guaranteed acyclic); cycle cases are built by closing a random back edge.
+Skips wholesale when hypothesis is absent (repo-wide importorskip idiom).
+"""
+from __future__ import annotations
+
+import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.taskarray import CycleError, ready_set, topo_order
+
+
+class Node:
+    """topo_order/ready_set only need .name and .deps."""
+
+    def __init__(self, name):
+        self.name = name
+        self.deps = []
+
+    def __repr__(self):
+        return f"Node({self.name})"
+
+
+@st.composite
+def dags(draw, max_nodes=10):
+    n = draw(st.integers(min_value=1, max_value=max_nodes))
+    nodes = [Node(f"a{i}") for i in range(n)]
+    for j in range(1, n):
+        for i in range(j):
+            if draw(st.booleans()):
+                nodes[j].deps.append(nodes[i])
+    return nodes
+
+
+@given(dags())
+@settings(max_examples=60, deadline=None)
+def test_topo_order_is_a_valid_linearization(nodes):
+    order = topo_order(nodes)
+    assert sorted(a.name for a in order) == sorted(a.name for a in nodes)
+    pos = {id(a): i for i, a in enumerate(order)}
+    for a in nodes:
+        for d in a.deps:
+            assert pos[id(d)] < pos[id(a)], (d.name, a.name)
+
+
+@given(dags())
+@settings(max_examples=60, deadline=None)
+def test_topo_order_deterministic_and_stable(nodes):
+    first = [a.name for a in topo_order(nodes)]
+    assert [a.name for a in topo_order(nodes)] == first
+    # sources keep submission order (Kahn with FIFO frontier)
+    sources = [a.name for a in nodes if not a.deps]
+    assert [n for n in first if n in set(sources)] == sources
+
+
+@given(dags())
+@settings(max_examples=60, deadline=None)
+def test_ready_set_matches_definition_along_topo_order(nodes):
+    order = topo_order(nodes)
+    done = []
+    for _ in range(len(order)):
+        ready = ready_set(nodes, done)
+        done_ids = {id(a) for a in done}
+        expect = [a for a in nodes if id(a) not in done_ids
+                  and all(id(d) in done_ids for d in a.deps)]
+        assert ready == expect
+        assert ready, "non-empty graph with nothing ready => cycle"
+        done.append(ready[0])           # complete one ready array
+    assert ready_set(nodes, done) == []
+
+
+@given(dags(), st.data())
+@settings(max_examples=60, deadline=None)
+def test_back_edge_makes_cycle_detected(nodes, data):
+    if len(nodes) < 2:
+        return
+    j = data.draw(st.integers(min_value=1, max_value=len(nodes) - 1))
+    i = data.draw(st.integers(min_value=0, max_value=j - 1))
+    nodes[j].deps.append(nodes[i])      # forward edge i -> j (maybe dup)
+    nodes[i].deps.append(nodes[j])      # back edge closes the cycle
+    with pytest.raises(CycleError) as exc:
+        topo_order(nodes)
+    # the error names the stuck arrays
+    assert nodes[i].name in str(exc.value)
+    assert nodes[j].name in str(exc.value)

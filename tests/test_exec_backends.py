@@ -1,0 +1,207 @@
+"""repro.exec backend conformance: one contract, three implementations.
+
+The same dual-payload DAG (fn for sim/inline, cmd for procpool) must
+produce the same values on every backend, with the same structured event
+stream shape; launch(LaunchPlan) must return a LaunchReport satisfying the
+shared invariants. Also covers the EventLog primitives, the deprecation
+shims (taskarray runners / core.realproc) and the exec <-> taskarray
+import-order regression.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.exec import LaunchPlan, LaunchReport, get_backend
+from repro.exec.base import (COMPLETE, DISPATCH, READY, RETRY, SUBMIT,
+                             EventLog, ExecBackend)
+from repro.taskarray import RetryPolicy, TaskGraph
+
+BACKENDS = ["sim", "procpool", "inline"]
+
+
+def make_backend(name):
+    """Small instances so the procpool case stays cheap."""
+    if name == "procpool":
+        return get_backend(name, n_launchers=1, workers_per_launcher=2)
+    if name == "inline":
+        return get_backend(name, sleep=False)
+    return get_backend(name)
+
+
+def dual_graph(n=4, work=0.02, inject=False):
+    """map -> reduce with BOTH payload forms so every backend runs it."""
+    g = TaskGraph("conf")
+    sq = g.map(lambda p, i: p["x"] * p["x"], [{"x": x} for x in range(n)],
+               cmd="params['x'] * params['x']", name="sq",
+               work_seconds=work)
+    g.reduce(lambda p, i: sum(i["sq"][p["lo"]:p["hi"]]), sq,
+             cmd="sum(inputs['sq'][params['lo']:params['hi']])",
+             name="tot", work_seconds=work)
+    if inject:
+        sq.tasks[1].fail_attempts = 1
+    return g
+
+
+# --------------------------------------------------------------------------
+# conformance: protocol, values, events, launch reports
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_backend_satisfies_protocol(name):
+    with make_backend(name) as b:
+        assert isinstance(b, ExecBackend)
+        assert b.name in (name, "procpool")
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_same_graph_same_values_and_events(name):
+    n = 4
+    with make_backend(name) as b:
+        res = dual_graph(n).run(b, RetryPolicy())
+    assert res.all_ok
+    assert res["sq"].values == [x * x for x in range(n)]
+    assert res["tot"].values[0] == sum(x * x for x in range(n))
+    counts = res.events.counts()
+    assert counts[SUBMIT] == 2                     # one per array
+    assert counts[COMPLETE] == n + 1               # one per task
+    assert all(e.ok for e in res.events.of(COMPLETE))
+    # append order: an array's submit precedes its completions
+    seen_submit = set()
+    for e in res.events:
+        if e.kind == SUBMIT:
+            seen_submit.add(e.array)
+        elif e.kind == COMPLETE:
+            assert e.array in seen_submit
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_injected_failure_emits_retry_events(name):
+    with make_backend(name) as b:
+        res = dual_graph(inject=True).run(
+            b, RetryPolicy(max_retries=2, backoff=0.01))
+    assert res.all_ok
+    assert res["sq"].results[1].attempts >= 2
+    retries = res.events.of(RETRY)
+    assert len(retries) >= 1
+    assert any(e.array == "sq" and e.attempt >= 2 for e in retries)
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_launch_report_invariants(name):
+    with make_backend(name) as b:
+        rep = b.launch(LaunchPlan(2, 2))
+    assert isinstance(rep, LaunchReport)
+    assert rep.n_nodes == 2 and rep.procs_per_node == 2
+    assert rep.total_procs == 4
+    assert rep.launch_time >= 0.0
+    assert rep.launch_rate >= 0.0
+    assert len(rep.events.of(SUBMIT)) == 1
+    ready = rep.events.of(READY)
+    assert len(ready) >= 1                         # per node or per proc
+    assert max(e.t for e in ready) <= rep.t_ready + 1e-9
+    row = rep.row()
+    assert set(row) >= {"backend", "topology", "nodes", "procs_per_node",
+                        "launch_s", "rate_per_s"}
+
+
+def test_sim_launch_supports_all_strategies():
+    with make_backend("sim") as b:
+        rows = {t: b.launch(LaunchPlan(8, 4, app="octave", topology=t))
+                for t in ("flat", "ssh-tree", "two-tier")}
+    assert rows["two-tier"].launch_time < rows["flat"].launch_time
+    for rep in rows.values():
+        assert rep.total_procs == 32
+
+
+@pytest.mark.parametrize("p", [1, 8, 64])
+def test_ssh_tree_launch_time_monotone_in_nodes(p):
+    """Regression for the HierarchicalSshTree cleanup (dead t_sp, spawner
+    double-booking): more nodes never launch *faster* — deeper ssh tree,
+    more Lustre contention."""
+    from repro.core.scheduler import measure_launch
+    prev = 0.0
+    for n in (8, 64, 512):
+        r = measure_launch("octave", n, p, strategy="ssh-tree")
+        assert r.launch_time >= prev - 1e-9, (n, p, r.launch_time, prev)
+        prev = r.launch_time
+
+
+def test_get_backend_unknown_raises():
+    with pytest.raises(KeyError):
+        get_backend("slurm")
+
+
+def test_get_backend_real_alias_is_procpool():
+    b = get_backend("real")                        # no pool spawned yet
+    assert b.name == "procpool"
+    assert b.pool is None
+    b.close()                                      # idempotent no-op
+
+
+# --------------------------------------------------------------------------
+# EventLog primitives
+# --------------------------------------------------------------------------
+
+
+def test_event_log_primitives():
+    log = EventLog()
+    log.emit(SUBMIT, 1.0, array="a")
+    log.emit(DISPATCH, 2.0, array="a")
+    log.emit(COMPLETE, 5.0, array="a", task=0, ok=True)
+    assert len(log) == 3
+    assert [e.kind for e in log] == [SUBMIT, DISPATCH, COMPLETE]
+    assert log.counts() == {SUBMIT: 1, DISPATCH: 1, COMPLETE: 1}
+    assert log.of(SUBMIT, COMPLETE)[1].t == 5.0
+    assert log.span() == 4.0
+    assert log.span(SUBMIT) == 0.0
+    assert EventLog().span() is None
+
+
+# --------------------------------------------------------------------------
+# deprecation shims keep the old names importable
+# --------------------------------------------------------------------------
+
+
+def test_taskarray_runner_shims_are_backends():
+    from repro.exec.inline import InlineBackend
+    from repro.exec.procpool import ProcPoolBackend
+    from repro.exec.sim import SimBackend
+    from repro.taskarray import (InlineRunner, RealRunner, SimRunner,
+                                 WorkerPool)
+    from repro.exec.pool import WorkerPool as PoolWorkerPool
+    assert issubclass(SimRunner, SimBackend)
+    assert issubclass(RealRunner, ProcPoolBackend)
+    assert issubclass(InlineRunner, InlineBackend)
+    assert WorkerPool is PoolWorkerPool
+
+
+def test_realproc_shim_single_protocol_source():
+    """The WORKER/LAUNCHER pipe protocol lives in exec.pool ONLY; the old
+    core.realproc names must be aliases, not copies."""
+    from repro.core import realproc
+    from repro.exec import pool
+    assert realproc.WORKER is pool.WORKER_SRC
+    assert realproc.LAUNCHER is pool.LAUNCHER_SRC
+    assert realproc.launch_once is pool.launch_once
+
+
+@pytest.mark.parametrize("first,second",
+                         [("repro.exec.sim", "repro.taskarray"),
+                          ("repro.taskarray", "repro.exec.sim"),
+                          ("repro.taskarray.runner_real", "repro.exec"),
+                          ("repro.core.realproc", "repro.taskarray")])
+def test_import_order_has_no_cycle(first, second):
+    """Regression: exec backends import taskarray.{api,dag,gather} while
+    taskarray's runner shims import exec — either import order must work."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", f"import {first}; import {second}"],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, capture_output=True, text=True, timeout=60)
+    assert proc.returncode == 0, proc.stderr

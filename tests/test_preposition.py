@@ -172,3 +172,55 @@ def test_sweep_quota_holds_over_limit():
     sup.preposition(cfg, shape, mesh, lambda: build_for(cfg, mesh))
     members = sup.launch_sweep(cfg, shape, mesh, [{}], lambda e, m: None)
     assert members[0].state == "held"
+
+
+def test_sweep_quota_held_for_member_lifetime():
+    """Regression: quota used to be released in a finally inside the same
+    launch iteration, so members never actually contended. Chips are now
+    held until release()."""
+    cfg = tiny_cfg()
+    mesh = make_host_mesh(1, 1)                    # 1 chip per member
+    sup = SweepSupervisor(max_chips=2)
+    shape = SHAPES["train_4k"]
+    sup.preposition(cfg, shape, mesh, lambda: build_for(cfg, mesh))
+
+    grid = [{"v": i} for i in range(4)]
+    members = sup.launch_sweep(cfg, shape, mesh, grid, lambda e, m: m.mid)
+    assert [m.state for m in members] == ["running", "running",
+                                         "held", "held"]
+    assert sup.quota.held == 2                     # still held after launch
+    # releasing one running member frees exactly its chips
+    sup.release(members[0])
+    assert members[0].state == "finished"
+    assert sup.quota.held == 1
+    sup.release(members[0])                        # idempotent
+    assert sup.quota.held == 1
+
+
+def test_sweep_retry_held_launches_backlog():
+    """The held members the old release-in-finally semantics could never
+    retry: free capacity, then retry_held() admits and launches them."""
+    cfg = tiny_cfg()
+    mesh = make_host_mesh(1, 1)
+    sup = SweepSupervisor(max_chips=1)
+    shape = SHAPES["train_4k"]
+    sup.preposition(cfg, shape, mesh, lambda: build_for(cfg, mesh))
+
+    members = sup.launch_sweep(cfg, shape, mesh,
+                               [{"v": i} for i in range(3)],
+                               lambda e, m: m.hparams["v"] * 10)
+    assert [m.state for m in members] == ["running", "held", "held"]
+    assert sup.retry_held() == []                  # no capacity yet
+    sup.release(members[0])
+    launched = sup.retry_held()                    # one slot -> one member
+    assert launched == [members[1]]
+    assert members[1].state == "running"
+    assert members[1].result == 10
+    assert members[2].state == "held"
+    sup.release(members[1])
+    assert sup.retry_held() == [members[2]]
+    sup.release(members[2])
+    assert sup.quota.held == 0
+    assert [m.result for m in members] == [0, 10, 20]
+    # every member launched exactly once; launch report covers all three
+    assert sup.launch_report()["n"] == 3
