@@ -6,7 +6,17 @@
 #                                    benchmark (writes BENCH_taskarray.json)
 set -eu
 cd "$(dirname "$0")/.."
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+# Suite-level per-test timeout so a regression in the hang class fixed by
+# ISSUE 8 (gather waiting forever on a lost result) fails fast instead of
+# wedging CI. Gated on the plugin: environments without pytest-timeout
+# (optional, see requirements-test.txt) still run the full suite.
+TIMEOUT_ARGS=""
+if python -c "import pytest_timeout" 2>/dev/null; then
+    TIMEOUT_ARGS="--timeout=300"
+fi
+# shellcheck disable=SC2086  # TIMEOUT_ARGS is intentionally word-split
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -x -q $TIMEOUT_ARGS "$@"
 if [ "${BENCH_SMOKE:-0}" = "1" ]; then
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python benchmarks/bench_taskarray.py --smoke \

@@ -21,6 +21,12 @@ RealLaunchResult and the gather summaries. One seam = prepositioning,
 retry policy and telemetry are implemented once and apply to every
 execution route (sim, real processes, inline).
 
+The retry/backoff/straggler/deadline state machine itself is ALSO
+implemented once: exec.driver.ArrayDriver, parameterized by a TimerHost
+clock (Sim events, threading timers, or a synchronous queue). A backend
+supplies only dispatch callbacks and feeds completions back in, so every
+backend has identical attempt/retry/straggler accounting by construction.
+
 The legacy names (taskarray.SimRunner/RealRunner/InlineRunner,
 core.realproc.compare) remain importable as deprecation shims.
 """
@@ -28,6 +34,8 @@ from __future__ import annotations
 
 from .base import (COMPLETE, DISPATCH, READY, RETRY, SUBMIT, BackendBase,
                    EventLog, ExecBackend, ExecEvent, LaunchPlan, LaunchReport)
+from .driver import (ArrayDriver, SimTimerHost, SyncTimerHost,
+                     ThreadTimerHost, TimerHost)
 from .pool import LAUNCHER_SRC, WORKER_SRC, ReadinessTimeout, WorkerPool
 
 _BACKENDS = {}

@@ -5,26 +5,56 @@ pool — fn payloads run right here, sharing the interpreter (and therefore
 jax devices, compile caches, prepositioned weights). This is how the
 hyperparameter sweep (launch.sweep, core.supervisor) submits its work as
 a TaskArray and still gets the gather layer: per-task status, bounded
-retries with backoff, and the unified event stream / summaries.
+retries with backoff, and the unified event stream / summaries — all via
+the shared exec.driver.ArrayDriver on a synchronous timer host
+(driver.SyncTimerHost; sleep=False folds backoff waits into a virtual
+clock offset for unit tests).
 
-Stragglers are not re-dispatched (one host, one interpreter — there is
-nowhere else to run), matching the supervisor's semantics. launch() is
-measured but trivial: "processes" are in-interpreter no-ops, so the
-report mostly serves protocol conformance.
+Stragglers are never re-dispatched here — not by a special case, but
+because dispatch is synchronous: no task is ever still running when the
+driver's straggler scan fires, so the shared state machine finds nothing
+to duplicate. launch() is measured but trivial: "processes" are
+in-interpreter no-ops, so the report mostly serves protocol conformance.
 """
 from __future__ import annotations
 
 import time
 from typing import Optional
 
-from repro.taskarray.api import GraphResult, TaskGraph, eval_cmd, \
-    gather_inputs
+from repro.taskarray.api import GraphResult, TaskArray, TaskGraph, \
+    eval_cmd, gather_inputs
 from repro.taskarray.dag import topo_order
-from repro.taskarray.gather import (FAILED, OK, ArrayResult, RetryPolicy,
-                                    TaskResult, summarize)
+from repro.taskarray.gather import RetryPolicy
 
-from .base import (COMPLETE, DISPATCH, READY, RETRY, SUBMIT, BackendBase,
-                   EventLog, LaunchPlan, LaunchReport)
+from .base import (READY, SUBMIT, BackendBase, EventLog, LaunchPlan,
+                   LaunchReport)
+from .driver import ArrayDriver, SyncTimerHost
+
+
+class _InlineArrayHost:
+    """Synchronous dispatch: evaluating the payload IS the dispatch, and
+    the completion is fed back before dispatch_one returns."""
+
+    def __init__(self, array: TaskArray, inputs):
+        self.array = array
+        self.inputs = inputs
+
+    def dispatch_one(self, driver: ArrayDriver, index: int, attempt: int,
+                     straggler: bool) -> None:
+        if driver.injected(index, attempt):
+            driver.completion(index, attempt, False)
+            return
+        spec = self.array.tasks[index]
+        try:
+            if self.array.fn is not None:
+                value = self.array.fn(spec.params, self.inputs)
+            else:
+                value = eval_cmd(self.array.cmd, spec.params, self.inputs,
+                                 attempt)
+        except Exception as e:
+            driver.completion(index, attempt, False, error=repr(e))
+            return
+        driver.completion(index, attempt, True, value)
 
 
 class InlineBackend(BackendBase):
@@ -53,50 +83,11 @@ class InlineBackend(BackendBase):
         done = GraphResult()
         done.events = events
         for array in topo_order(graph.arrays):
-            inputs = gather_inputs(array, done)
-            t0 = time.monotonic()
-            events.emit(SUBMIT, t0, array=array.name,
-                        detail={"n_tasks": array.n_tasks})
-            results = []
-            t_dispatch = 0.0
-            for spec in array.tasks:
-                r = TaskResult(spec.index, submitted_at=time.monotonic())
-                events.emit(DISPATCH, r.submitted_at, array=array.name,
-                            task=spec.index)
-                while True:
-                    r.attempts += 1
-                    if r.attempts > 1:
-                        events.emit(RETRY, time.monotonic(),
-                                    array=array.name, task=spec.index,
-                                    attempt=r.attempts,
-                                    detail={"straggler": False})
-                    t1 = time.monotonic()
-                    try:
-                        if r.attempts <= spec.fail_attempts:
-                            raise RuntimeError(
-                                f"injected failure (attempt {r.attempts})")
-                        if array.fn is not None:
-                            r.value = array.fn(spec.params, inputs)
-                        else:
-                            r.value = eval_cmd(array.cmd, spec.params,
-                                               inputs, r.attempts)
-                        r.status = OK
-                        break
-                    except Exception as e:
-                        r.error = repr(e)
-                        if not policy.may_retry(r.attempts):
-                            r.status = FAILED
-                            break
-                        if self.sleep:
-                            time.sleep(policy.delay(r.attempts))
-                t_dispatch += time.monotonic() - t1
-                r.finished_at = time.monotonic()
-                events.emit(COMPLETE, r.finished_at, array=array.name,
-                            task=spec.index, attempt=r.attempts,
-                            ok=r.status == OK)
-                results.append(r)
-            done[array.name] = ArrayResult(
-                array.name, results,
-                summarize(array.name, results, t0, time.monotonic(),
-                          dispatch_seconds=max(t_dispatch, 1e-9)))
+            host = _InlineArrayHost(array, gather_inputs(array, done))
+            timers = SyncTimerHost(sleep=self.sleep)
+            driver = ArrayDriver(array, host.inputs, policy, events, timers,
+                                 dispatch_one=host.dispatch_one)
+            driver.start()
+            timers.drain(lambda d=driver: d.finished)
+            done[array.name] = driver.result()
         return done

@@ -215,10 +215,17 @@ def launch_once(n_nodes: int, procs_per_node: int, *,
 
 class WorkerPool:
     """The persistent two-tier pool. `submit` routes a task message to the
-    least-loaded launcher; results arrive on reader threads and are handed
-    to `on_result` (set by the backend). Thread-safe. If any launcher fails
-    to come up within `ready_timeout`, the whole tree is torn down before
-    the error propagates (no abandoned children)."""
+    least-loaded LIVE launcher; results arrive on reader threads and are
+    handed to `on_result` (set by the backend). Thread-safe. If any
+    launcher fails to come up within `ready_timeout`, the whole tree is
+    torn down before the error propagates (no abandoned children).
+
+    Failure is loud, never silent: submitting to a closed pool raises
+    RuntimeError (a silently-dropped task would make the caller's gather
+    wait forever), a launcher whose stdout hits EOF (crash) is marked dead
+    and excluded from routing, and submit raises once no live launcher
+    remains. Results already lost inside a dead launcher surface through
+    the driver's task deadline, not here."""
 
     def __init__(self, n_launchers: int = 2, workers_per_launcher: int = 4,
                  ready_timeout: float = 30.0):
@@ -235,6 +242,7 @@ class WorkerPool:
         self.n_workers = n_launchers * workers_per_launcher
         self.on_result: Callable[[dict], None] = lambda msg: None
         self._outstanding = [0] * n_launchers
+        self._dead = [False] * n_launchers
         self._lock = threading.Lock()
         self._closed = False
         self._readers = [threading.Thread(target=self._read, args=(i,),
@@ -248,17 +256,32 @@ class WorkerPool:
             with self._lock:
                 self._outstanding[idx] -= 1
             self.on_result(json.loads(line))
+        # EOF: the launcher exited (clean close OR a crash) — stop routing
+        # new tasks to it; its in-flight tasks will never produce results
+        with self._lock:
+            self._dead[idx] = True
 
     def submit(self, msg: dict) -> None:
         with self._lock:
             if self._closed:
+                raise RuntimeError("pool closed")
+            line = json.dumps(msg) + "\n"
+            while True:
+                live = [i for i in range(len(self.launchers))
+                        if not self._dead[i]]
+                if not live:
+                    raise RuntimeError(
+                        "no live launchers (all exited); pool is unusable")
+                idx = min(live, key=lambda i: self._outstanding[i])
+                lp = self.launchers[idx]
+                try:
+                    lp.stdin.write(line)
+                    lp.stdin.flush()
+                except (OSError, ValueError):
+                    self._dead[idx] = True     # died since last read; reroute
+                    continue
+                self._outstanding[idx] += 1
                 return
-            idx = min(range(len(self.launchers)),
-                      key=lambda i: self._outstanding[i])
-            self._outstanding[idx] += 1
-            lp = self.launchers[idx]
-            lp.stdin.write(json.dumps(msg) + "\n")
-            lp.stdin.flush()
 
     def close(self) -> None:
         with self._lock:

@@ -17,155 +17,61 @@ Payloads are `cmd` expression strings evaluated in the worker with
 travel back as JSON (so they must be JSON-serializable). fn payloads
 cannot cross the process boundary — graphs for this backend carry cmd.
 
-Gather runs in the parent: bounded retries with backoff (threading
-timers), straggler re-dispatch against the running-median duration, fault
-injection uniform with the sim backend.
+Gather runs in the parent through the shared exec.driver.ArrayDriver
+(threading timers, driver.ThreadTimerHost): this backend only writes task
+messages to the pool and routes result lines back into the driver. Task
+ids carry a per-run nonce so a reused pool can never deliver one graph's
+late result into the next graph's same-named array, and the pool's
+on_result handler is reset when the run ends. A launcher that dies
+mid-run surfaces through RetryPolicy.task_deadline as FAILED tasks
+instead of an infinite gather wait.
 """
 from __future__ import annotations
 
-import threading
-import time
-from typing import Dict, List, Optional, Set
+import itertools
+from typing import Dict, Optional
 
 from repro.taskarray.api import GraphResult, TaskArray, TaskGraph, \
     gather_inputs
 from repro.taskarray.dag import topo_order
-from repro.taskarray.gather import (FAILED, OK, ArrayResult, RetryPolicy,
-                                    StragglerDetector, TaskResult, summarize)
+from repro.taskarray.gather import RetryPolicy
 
-from .base import (COMPLETE, DISPATCH, RETRY, SUBMIT, BackendBase,
-                   EventLog, LaunchPlan, LaunchReport)
+from .base import BackendBase, EventLog, LaunchPlan, LaunchReport
+from .driver import ArrayDriver, ThreadTimerHost
 from .pool import WorkerPool, launch_once
 
+_RUN_NONCE = itertools.count()           # per-run task-id namespace
 
-class _ArrayRun:
-    """Wall-clock gather for one array: submit all, then watchdog loop
-    (straggler scan) until every task is terminal."""
 
-    def __init__(self, pool: WorkerPool, array: TaskArray, inputs,
-                 policy: RetryPolicy, events: EventLog):
+class _PoolArrayHost:
+    """The pool side of one ArrayDriver: serialize task messages (with the
+    run nonce in the id) and submit them to the WorkerPool. Dispatch
+    errors (closed pool, no live launchers) propagate to the driver as
+    attempt failures."""
+
+    def __init__(self, pool: WorkerPool, nonce: str, array: TaskArray,
+                 inputs):
         if array.cmd is None:
             raise ValueError(
                 f"array {array.name!r} has no cmd payload; ProcPoolBackend "
                 "workers are separate processes and cannot run fn callables")
         self.pool = pool
+        self.nonce = nonce
         self.array = array
         self.inputs = inputs
-        self.policy = policy
-        self.events = events
-        self.results = [TaskResult(i) for i in range(array.n_tasks)]
-        self.detector = StragglerDetector(policy.straggler_k,
-                                          policy.min_straggler_samples)
-        self.straggler_redispatches = 0
-        self._dispatched_at = [0.0] * array.n_tasks
-        self._in_backoff: Set[int] = set()
-        self._timers: List[threading.Timer] = []
-        self._cond = threading.Condition()
-        self._terminal = 0
-        self.t0 = 0.0
-        self.dispatch_seconds = 0.0
 
     def _msg(self, index: int, attempt: int) -> dict:
         spec = self.array.tasks[index]
         sleep = 0.0
         if attempt == 1 and spec.straggle_factor > 1.0:
             sleep = spec.work_seconds * (spec.straggle_factor - 1.0)
-        return {"id": f"{self.array.name}:{index}:{attempt}",
+        return {"id": f"{self.nonce}:{self.array.name}:{index}:{attempt}",
                 "expr": self.array.cmd, "params": spec.params,
                 "inputs": self.inputs, "attempt": attempt, "sleep": sleep}
 
-    def run(self) -> ArrayResult:
-        self.t0 = time.monotonic()
-        self.events.emit(SUBMIT, self.t0, array=self.array.name,
-                         detail={"n_tasks": self.array.n_tasks})
-        for i, r in enumerate(self.results):
-            r.attempts = 1
-            r.submitted_at = time.monotonic()
-            self._dispatched_at[i] = r.submitted_at
-            self.pool.submit(self._msg(i, 1))
-        self.dispatch_seconds = max(time.monotonic() - self.t0, 1e-9)
-        self.events.emit(DISPATCH, time.monotonic(), array=self.array.name,
-                         detail={"dispatch_s": self.dispatch_seconds})
-        with self._cond:
-            while self._terminal < len(self.results):
-                self._cond.wait(timeout=self.policy.scan_period)
-                self._scan_stragglers()
-        for t in self._timers:
-            t.cancel()
-        return ArrayResult(
-            self.array.name, self.results,
-            summarize(self.array.name, self.results, self.t0,
-                      time.monotonic(), dispatch_seconds=self.dispatch_seconds,
-                      straggler_redispatches=self.straggler_redispatches))
-
-    # called from pool reader threads
-    def on_result(self, index: int, attempt: int, msg: dict):
-        with self._cond:
-            r = self.results[index]
-            if r.terminal:
-                return                # straggler loser / stale retry
-            spec = self.array.tasks[index]
-            if msg.get("ok") and attempt > spec.fail_attempts:
-                r.status = OK
-                r.value = msg.get("value")
-                r.finished_at = time.monotonic()
-                self.detector.update(r.finished_at - r.submitted_at)
-                self.events.emit(COMPLETE, r.finished_at,
-                                 array=self.array.name, task=index,
-                                 attempt=attempt, ok=True)
-                self._terminal += 1
-            else:
-                r.error = (msg.get("error") if not msg.get("ok")
-                           else f"injected failure (attempt {attempt})")
-                if self.policy.may_retry(r.attempts):
-                    self._in_backoff.add(index)
-                    timer = threading.Timer(self.policy.delay(r.attempts),
-                                            self._retry, args=(index,))
-                    timer.daemon = True
-                    self._timers.append(timer)
-                    timer.start()
-                else:
-                    r.status = FAILED
-                    r.finished_at = time.monotonic()
-                    self.events.emit(COMPLETE, r.finished_at,
-                                     array=self.array.name, task=index,
-                                     attempt=attempt, ok=False,
-                                     detail={"error": r.error})
-                    self._terminal += 1
-            self._cond.notify_all()
-
-    def _retry(self, index: int):
-        with self._cond:
-            r = self.results[index]
-            if r.terminal:
-                return
-            self._in_backoff.discard(index)
-            r.attempts += 1
-            self._dispatched_at[index] = time.monotonic()
-            self.events.emit(RETRY, self._dispatched_at[index],
-                             array=self.array.name, task=index,
-                             attempt=r.attempts,
-                             detail={"straggler": False})
-            self.pool.submit(self._msg(index, r.attempts))
-
-    def _scan_stragglers(self):
-        # caller holds self._cond
-        thr = self.detector.threshold()
-        if thr is None:
-            return
-        now = time.monotonic()
-        for i, r in enumerate(self.results):
-            if r.terminal or r.redispatched or i in self._in_backoff:
-                continue
-            if now - self._dispatched_at[i] > thr:
-                r.redispatched = True
-                r.attempts += 1
-                self.straggler_redispatches += 1
-                self._dispatched_at[i] = now
-                self.events.emit(RETRY, now, array=self.array.name,
-                                 task=i, attempt=r.attempts,
-                                 detail={"straggler": True})
-                self.pool.submit(self._msg(i, r.attempts))
+    def dispatch_one(self, driver: ArrayDriver, index: int, attempt: int,
+                     straggler: bool) -> None:
+        self.pool.submit(self._msg(index, attempt))
 
 
 class ProcPoolBackend(BackendBase):
@@ -199,23 +105,43 @@ class ProcPoolBackend(BackendBase):
                   policy: Optional[RetryPolicy] = None) -> GraphResult:
         policy = policy or RetryPolicy()
         pool = self._ensure_pool()
+        nonce = f"r{next(_RUN_NONCE)}"
         events = EventLog()
-        runs: Dict[str, _ArrayRun] = {}
+        drivers: Dict[str, ArrayDriver] = {}
 
         def route(msg: dict):
-            name, index, attempt = msg["id"].rsplit(":", 2)
-            run = runs.get(name)
-            if run is not None:
-                run.on_result(int(index), int(attempt), msg)
+            try:
+                rn, rest = msg["id"].split(":", 1)
+                name, index, attempt = rest.rsplit(":", 2)
+            except (KeyError, ValueError):
+                return
+            if rn != nonce:
+                return                   # a previous run's late result
+            driver = drivers.get(name)
+            if driver is not None:
+                driver.completion(int(index), int(attempt),
+                                  bool(msg.get("ok")),
+                                  value=msg.get("value"),
+                                  error=msg.get("error"))
 
         pool.on_result = route
         done = GraphResult()
         done.events = events
-        for array in topo_order(graph.arrays):
-            run = _ArrayRun(pool, array, gather_inputs(array, done),
-                            policy, events)
-            runs[array.name] = run
-            done[array.name] = run.run()
+        try:
+            for array in topo_order(graph.arrays):
+                host = _PoolArrayHost(pool, nonce, array,
+                                      gather_inputs(array, done))
+                driver = ArrayDriver(array, host.inputs, policy, events,
+                                     ThreadTimerHost(),
+                                     dispatch_one=host.dispatch_one)
+                drivers[array.name] = driver
+                driver.start()
+                driver.wait()
+                done[array.name] = driver.result()
+        finally:
+            # a reused pool must not keep routing into this (finished)
+            # run: late results are dropped at the pool, not mis-routed
+            pool.on_result = lambda msg: None
         return done
 
     def close(self):

@@ -3,9 +3,10 @@
 Wraps core.scheduler.Scheduler / core.cluster.Cluster and the §III launch
 strategies (core.launcher). Each ready array is submitted as ONE
 core.scheduler.ArrayJob (admitted and accounted like a Slurm job array);
-per-task completion events drive gather, bounded retries (cancellable Sim
-timers, exponential backoff) and straggler re-dispatch (periodic scan
-against k x running-median duration).
+per-task completion events feed the shared exec.driver.ArrayDriver, which
+owns gather, bounded retries, straggler re-dispatch and deadlines — this
+backend supplies only dispatch (ArrayJob submission) and completion
+callbacks, on simulated timers (driver.SimTimerHost).
 
 Time is simulated — a 648-node, 100k-task run takes milliseconds of wall
 time — but VALUES are real: a task's fn/cmd payload is evaluated
@@ -16,164 +17,77 @@ campaign, with the actual analysis code in the loop.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Set
+from typing import List, Optional, Set
 
 from repro.core.cluster import Cluster, ClusterSpec, TX_GREEN
-from repro.core.events import Sim, Timer
+from repro.core.events import Sim
 from repro.core.scheduler import AdmissionMode, JobState, Scheduler, \
     UserLimits
 from repro.taskarray.api import GraphResult, TaskArray, TaskGraph, \
     eval_cmd, gather_inputs
 from repro.taskarray.dag import ready_set
-from repro.taskarray.gather import (FAILED, OK, ArrayResult, RetryPolicy,
-                                    StragglerDetector, TaskResult, summarize)
+from repro.taskarray.gather import ArrayResult, RetryPolicy
 
-from .base import (COMPLETE, DISPATCH, READY, RETRY, SUBMIT, BackendBase,
+from .base import (COMPLETE, DISPATCH, READY, SUBMIT, BackendBase,
                    EventLog, LaunchPlan, LaunchReport)
+from .driver import ArrayDriver, SimTimerHost
 
 
-class _ArrayRun:
-    """State machine for one array inside the sim: dispatch -> per-task
-    completion events -> retries / straggler duplicates -> summary."""
+class _SimArrayHost:
+    """The sim side of one ArrayDriver: submit ArrayJobs (one N-task job
+    at attempt 1, single-task follow-ups for retries/duplicates) and turn
+    scheduler completion events into driver completions, evaluating the
+    payload in-process at completion time."""
 
     def __init__(self, backend: "SimBackend", sched: Scheduler,
-                 array: TaskArray, inputs, policy: RetryPolicy,
-                 events: EventLog,
-                 on_complete: Callable[[ArrayResult], None]):
+                 array: TaskArray):
         self.backend = backend
-        self.sim = sched.sim
         self.sched = sched
         self.array = array
-        self.inputs = inputs
-        self.policy = policy
-        self.events = events
-        self.on_complete = on_complete
-        self.results = [TaskResult(i) for i in range(array.n_tasks)]
-        self.detector = StragglerDetector(policy.straggler_k,
-                                          policy.min_straggler_samples)
-        self.straggler_redispatches = 0
-        self._dispatched_at = [0.0] * array.n_tasks
-        self._in_backoff: Set[int] = set()
-        self._terminal = 0
-        self._scan_timer: Optional[Timer] = None
-        self.t0 = self.sim.now
-        self.job = None
+        self.job = None                  # the attempt-1 ArrayJob
 
-    # ---- dispatch ----------------------------------------------------
-    def submit(self):
+    def dispatch_all(self, driver: ArrayDriver) -> None:
         # attempt 1 runs at straggle_factor x work: a slow NODE, so any
         # re-dispatched attempt gets nominal work elsewhere
         work = [t.work_seconds * t.straggle_factor for t in self.array.tasks]
-        for r in self.results:
-            r.attempts = 1
-            r.submitted_at = self.sim.now
-        self._dispatched_at = [self.sim.now] * self.array.n_tasks
-        self.events.emit(SUBMIT, self.sim.now, array=self.array.name,
-                         detail={"n_tasks": self.array.n_tasks})
         self.job = self.sched.submit_array(
             self.backend.user, self.array.app, work,
             self.array.procs_per_task, attempt=1,
-            max_nodes=self.backend.max_nodes, task_done=self._task_done)
-        self.events.emit(DISPATCH, self.sim.now, array=self.array.name,
-                         detail={"n_nodes": self.job.n_nodes})
-        self._scan_timer = self.sim.schedule(self.policy.scan_period,
-                                             self._scan)
+            max_nodes=self.backend.max_nodes,
+            task_done=lambda i, a, t: self._task_done(driver, i, a, t))
 
-    def _resubmit(self, index: int, attempt: int, straggler: bool = False):
-        """One-task follow-up array (retry or straggler duplicate)."""
+    def dispatch_one(self, driver: ArrayDriver, index: int, attempt: int,
+                     straggler: bool) -> None:
+        if straggler:
+            self.sched.stats.straggler_redispatches += 1
         spec = self.array.tasks[index]
-        self._dispatched_at[index] = self.sim.now
-        self.events.emit(RETRY, self.sim.now, array=self.array.name,
-                         task=index, attempt=attempt,
-                         detail={"straggler": straggler})
         self.sched.submit_array(
             self.backend.user, self.array.app, [spec.work_seconds],
             self.array.procs_per_task, attempt=attempt, max_nodes=1,
-            task_done=lambda _i, a, t: self._task_done(index, a, t))
+            task_done=lambda _i, a, t: self._task_done(driver, index, a, t))
 
-    # ---- completion / retry / straggler ------------------------------
-    def _task_done(self, index: int, attempt: int, t: float):
-        r = self.results[index]
-        if r.terminal:
-            return                    # straggler loser or stale retry
-        spec = self.array.tasks[index]
-        if attempt <= spec.fail_attempts:
-            self._on_failure(index, attempt,
-                             f"injected failure (attempt {attempt})", t)
+    def dispatch_seconds(self) -> Optional[float]:
+        launch = self.job.launch if self.job is not None else None
+        return launch.launch_time if launch is not None else None
+
+    def _task_done(self, driver: ArrayDriver, index: int, attempt: int,
+                   t: float) -> None:
+        if not driver.is_current(index, attempt):
+            return                       # straggler loser / stale attempt
+        if driver.injected(index, attempt):
+            driver.completion(index, attempt, False, t=t)
             return
+        spec = self.array.tasks[index]
         try:
             if self.array.fn is not None:
-                value = self.array.fn(spec.params, self.inputs)
+                value = self.array.fn(spec.params, driver.inputs)
             else:
-                value = eval_cmd(self.array.cmd, spec.params, self.inputs,
+                value = eval_cmd(self.array.cmd, spec.params, driver.inputs,
                                  attempt)
-        except Exception as e:          # payload bug: real failure path
-            self._on_failure(index, attempt, repr(e), t)
+        except Exception as e:           # payload bug: real failure path
+            driver.completion(index, attempt, False, error=repr(e), t=t)
             return
-        r.status = OK
-        r.value = value
-        r.finished_at = t
-        self.detector.update(t - r.submitted_at)
-        self.events.emit(COMPLETE, t, array=self.array.name, task=index,
-                         attempt=attempt, ok=True)
-        self._finish_one()
-
-    def _on_failure(self, index: int, attempt: int, error: str, t: float):
-        r = self.results[index]
-        r.error = error
-        retry_number = r.attempts       # retries consumed so far + this one
-        if self.policy.may_retry(retry_number):
-            self._in_backoff.add(index)
-            self.sim.schedule(self.policy.delay(retry_number),
-                              lambda: self._retry(index))
-        else:
-            r.status = FAILED
-            r.finished_at = t
-            self.events.emit(COMPLETE, t, array=self.array.name, task=index,
-                             attempt=attempt, ok=False,
-                             detail={"error": error})
-            self._finish_one()
-
-    def _retry(self, index: int):
-        r = self.results[index]
-        if r.terminal:
-            return
-        self._in_backoff.discard(index)
-        r.attempts += 1
-        self._resubmit(index, r.attempts)
-
-    def _scan(self):
-        """Periodic straggler scan: any running task whose elapsed time
-        exceeds k x median gets ONE duplicate dispatch; first completion
-        wins, the loser's event is ignored."""
-        if self._terminal >= len(self.results):
-            return
-        thr = self.detector.threshold()
-        if thr is not None:
-            for i, r in enumerate(self.results):
-                if (r.terminal or r.redispatched
-                        or i in self._in_backoff):
-                    continue
-                if self.sim.now - self._dispatched_at[i] > thr:
-                    r.redispatched = True
-                    r.attempts += 1
-                    self.straggler_redispatches += 1
-                    self.sched.stats.straggler_redispatches += 1
-                    self._resubmit(i, r.attempts, straggler=True)
-        self._scan_timer = self.sim.schedule(self.policy.scan_period,
-                                             self._scan)
-
-    def _finish_one(self):
-        self._terminal += 1
-        if self._terminal == len(self.results):
-            self.sim.cancel(self._scan_timer)
-            launch = self.job.launch
-            summary = summarize(
-                self.array.name, self.results, self.t0, self.sim.now,
-                dispatch_seconds=launch.launch_time if launch else None,
-                straggler_redispatches=self.straggler_redispatches)
-            self.on_complete(ArrayResult(self.array.name, self.results,
-                                         summary))
+        driver.completion(index, attempt, True, value, t=t)
 
 
 class SimBackend(BackendBase):
@@ -239,6 +153,7 @@ class SimBackend(BackendBase):
         policy = policy or RetryPolicy()
         sim = Sim()
         self.sched = self._make_sched(sim, {a.app for a in graph.arrays})
+        timers = SimTimerHost(sim)
         events = EventLog()
         done = GraphResult()
         done.events = events
@@ -250,10 +165,14 @@ class SimBackend(BackendBase):
                 if arr.name in submitted:
                     continue
                 submitted.add(arr.name)
-                run = _ArrayRun(self, self.sched, arr,
-                                gather_inputs(arr, done), policy, events,
-                                lambda res, a=arr: complete(a, res))
-                run.submit()
+                host = _SimArrayHost(self, self.sched, arr)
+                driver = ArrayDriver(
+                    arr, gather_inputs(arr, done), policy, events, timers,
+                    dispatch_one=host.dispatch_one,
+                    dispatch_all=host.dispatch_all,
+                    on_finish=lambda res, a=arr: complete(a, res),
+                    dispatch_seconds=host.dispatch_seconds)
+                driver.start()
 
         def complete(arr: TaskArray, res: ArrayResult):
             done[arr.name] = res

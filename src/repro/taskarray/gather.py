@@ -48,13 +48,20 @@ class TaskResult:
 @dataclass
 class RetryPolicy:
     """Bounded retries with exponential backoff + straggler re-dispatch
-    thresholds. One policy object parameterizes a whole graph run."""
+    thresholds. One policy object parameterizes a whole graph run; the
+    state machine that enforces it lives in repro.exec.driver.ArrayDriver
+    (one implementation, every backend)."""
     max_retries: int = 2             # retries AFTER the first attempt
     backoff: float = 0.25            # delay before retry #1 (seconds)
     backoff_factor: float = 2.0
     straggler_k: float = 3.0         # elapsed > k x median -> re-dispatch
     min_straggler_samples: int = 3   # median needs this many completions
-    scan_period: float = 0.25        # straggler-scan cadence
+    scan_period: float = 0.25        # straggler-scan / deadline cadence
+    task_deadline: Optional[float] = None
+    # ^ per-task wall budget from first submit; exceeded -> FAILED with a
+    #   timeout error. This is what turns a dead launcher (a dispatch that
+    #   will never produce a completion) into a result instead of an
+    #   infinite gather wait. None disables.
 
     def delay(self, retry_number: int) -> float:
         """Backoff before the retry_number-th retry (1-based)."""

@@ -131,6 +131,57 @@ def test_ssh_tree_launch_time_monotone_in_nodes(p):
         prev = r.launch_time
 
 
+def retry_graph():
+    """Fail-injection-only DAG (stragglers disabled by the policy below):
+    deterministic attempt counts on every clock."""
+    g = TaskGraph("acct")
+    arr = g.map(lambda p, i: p["x"] * 3, [{"x": x} for x in range(5)],
+                cmd="params['x'] * 3", name="tasks", work_seconds=0.01)
+    arr.tasks[1].fail_attempts = 1                 # 1 retry, then ok
+    arr.tasks[2].fail_attempts = 2                 # 2 retries, then ok
+    arr.tasks[3].fail_attempts = 99                # exhausts the budget
+    return g
+
+
+def test_retry_accounting_identical_on_all_backends():
+    """The unified driver's semantics, pinned: the same RetryPolicy and
+    fail-injection DAG yields IDENTICAL per-task attempts, retry/straggler
+    counts and event accounting on sim, procpool and inline."""
+    acct = {}
+    for name in BACKENDS:
+        with make_backend(name) as b:
+            res = retry_graph().run(
+                b, RetryPolicy(max_retries=2, backoff=0.01,
+                               min_straggler_samples=1 << 20,
+                               scan_period=0.05))
+        arr = res["tasks"]
+        acct[name] = {
+            "per_task": [(r.status, r.attempts) for r in arr.results],
+            "retries": arr.summary.retries,
+            "stragglers": arr.summary.straggler_redispatches,
+            "retry_events": len(res.events.of(RETRY)),
+            "complete": sorted((e.task, e.attempt, e.ok)
+                               for e in res.events.of(COMPLETE)),
+        }
+    assert acct["sim"] == acct["procpool"] == acct["inline"]
+    assert acct["sim"]["per_task"] == [("ok", 1), ("ok", 2), ("ok", 3),
+                                       ("failed", 3), ("ok", 1)]
+    assert acct["sim"]["retries"] == acct["sim"]["retry_events"] == 5
+    assert acct["sim"]["stragglers"] == 0
+
+
+def test_backends_share_the_driver_state_machine():
+    """No backend-private retry/straggler copies: all three modules route
+    through exec.driver.ArrayDriver (the ISSUE 8 tentpole)."""
+    import repro.exec.driver as drv
+    import repro.exec.inline as inline
+    import repro.exec.procpool as procpool
+    import repro.exec.sim as sim
+    for mod in (sim, procpool, inline):
+        assert not hasattr(mod, "_ArrayRun")
+        assert mod.ArrayDriver is drv.ArrayDriver
+
+
 def test_get_backend_unknown_raises():
     with pytest.raises(KeyError):
         get_backend("slurm")

@@ -1,0 +1,344 @@
+"""exec.driver.ArrayDriver: the ONE retry/straggler state machine.
+
+Unit tests drive the state machine directly through a manually-advanced
+TimerHost (no real time, no processes), pinning the semantics every
+backend inherits; the WorkerPool/ProcPoolBackend tests are the regression
+suite for the divergence bugs the three private copies used to hide:
+
+  1. submit to a closed pool raised nothing and dropped the task, so
+     gather blocked forever                      -> RuntimeError
+  2. a failed result from a superseded attempt (straggler loser) passed
+     the terminal guard and fired a spurious retry -> stale attempts drop
+  3. a reused pool kept routing a finished graph's late results into the
+     next graph's same-named array              -> per-run id nonce +
+                                                   handler reset
+  4. a crashed launcher kept receiving new submits and its lost results
+     hung the gather                             -> dead-launcher routing
+                                                   + task deadline
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import pytest
+
+from repro.exec.base import COMPLETE, RETRY, EventLog
+from repro.exec.driver import ArrayDriver, SyncTimerHost
+from repro.exec.pool import WorkerPool
+from repro.exec.procpool import ProcPoolBackend
+from repro.taskarray import RetryPolicy, TaskGraph
+from repro.taskarray.gather import FAILED, OK
+
+
+class ManualTimerHost:
+    """Deterministic TimerHost: time moves only via advance(), firing due
+    callbacks in order — the driver's semantics with zero wall time."""
+
+    def __init__(self):
+        self.t = 0.0
+        self._timers = []                # [due, seq, fn, active]
+        self._seq = 0
+
+    def now(self):
+        return self.t
+
+    def call_later(self, delay, fn):
+        entry = [self.t + delay, self._seq, fn, True]
+        self._seq += 1
+        self._timers.append(entry)
+        return entry
+
+    def cancel(self, handle):
+        if handle is not None:
+            handle[3] = False
+
+    def advance(self, dt):
+        target = self.t + dt
+        while True:
+            due = [e for e in self._timers if e[3] and e[0] <= target]
+            if not due:
+                break
+            e = min(due, key=lambda e: (e[0], e[1]))
+            e[3] = False
+            self.t = max(self.t, e[0])
+            e[2]()
+        self.t = target
+
+
+def one_array(n=1, **spec_kw):
+    g = TaskGraph("t")
+    arr = g.map(lambda p, i: p["x"], [{"x": x} for x in range(n)],
+                name="a", work_seconds=0.01)
+    for k, v in spec_kw.items():
+        setattr(arr.tasks[-1], k, v)
+    return arr
+
+
+def make_driver(arr, policy, host, dispatch=None):
+    calls = []
+
+    def record(driver, index, attempt, straggler):
+        calls.append((index, attempt, straggler))
+        if dispatch is not None:
+            dispatch(driver, index, attempt, straggler)
+
+    d = ArrayDriver(arr, None, policy, EventLog(), host,
+                    dispatch_one=record)
+    return d, calls
+
+
+# --------------------------------------------------------------------------
+# state-machine semantics (manual clock)
+# --------------------------------------------------------------------------
+
+
+def test_retry_backoff_schedule_and_budget():
+    host = ManualTimerHost()
+    arr = one_array(fail_attempts=99)
+    d, calls = make_driver(arr, RetryPolicy(max_retries=2, backoff=1.0,
+                                            backoff_factor=2.0), host)
+    d.start()
+    d.completion(0, 1, True)             # injection turns this into failure
+    assert not d.finished
+    host.advance(1.0)                    # retry #1 after backoff 1.0
+    d.completion(0, 2, True)
+    host.advance(2.0)                    # retry #2 after backoff 2.0
+    d.completion(0, 3, True)
+    assert d.finished
+    r = d.result().results[0]
+    assert r.status == FAILED and r.attempts == 3
+    assert "injected failure (attempt 3)" in r.error
+    assert [c[:2] for c in calls] == [(0, 1), (0, 2), (0, 3)]
+
+
+def test_stale_attempt_result_dropped():
+    """Regression (bug 2): the losing straggler attempt's failure must not
+    pass the terminal guard and schedule a spurious retry."""
+    host = ManualTimerHost()
+    g = TaskGraph("t")
+    arr = g.map(lambda p, i: p["x"], [{"x": x} for x in range(4)],
+                name="a", work_seconds=0.01)
+    arr.tasks[3].fail_attempts = 1       # the straggler's injected failure
+    policy = RetryPolicy(max_retries=2, backoff=0.5, straggler_k=2.0,
+                         min_straggler_samples=3, scan_period=1.0)
+    d, calls = make_driver(arr, policy, host)
+    d.start()
+    for i in range(3):                   # three quick completions: median
+        d.completion(i, 1, True, value=i)
+    host.advance(1.0)                    # scan: task 3 elapsed 1.0 > 2x~0
+    r = d.results[3]
+    assert r.redispatched and r.attempts == 2
+    assert calls[-1] == (3, 2, True)
+    # late FAILURE from the superseded attempt 1: must be dropped, not
+    # retried (pre-fix this inflated attempts to 3 and re-dispatched)
+    d.completion(3, 1, True)             # ok=True but attempt 1 is injected
+    assert r.attempts == 2 and not r.terminal
+    assert len(calls) == 5               # 4 initial + 1 duplicate, no more
+    d.completion(3, 2, True, value=3)    # the current attempt decides
+    assert d.finished
+    assert r.status == OK and r.attempts == 2
+    retries = d.events.of(RETRY)
+    assert len(retries) == 1 and retries[0].detail["straggler"]
+
+
+def test_stale_success_also_dropped():
+    """The newest attempt is authoritative in BOTH directions: a stale
+    success neither completes the task nor corrupts its value."""
+    host = ManualTimerHost()
+    g = TaskGraph("t")
+    arr = g.map(lambda p, i: p["x"], [{"x": x} for x in range(4)],
+                name="a", work_seconds=0.01)
+    policy = RetryPolicy(max_retries=2, backoff=0.5, straggler_k=2.0,
+                         min_straggler_samples=3, scan_period=1.0)
+    d, _ = make_driver(arr, policy, host)
+    d.start()
+    for i in range(3):
+        d.completion(i, 1, True, value=i)
+    host.advance(1.0)                    # straggler duplicate: attempt 2
+    d.completion(3, 1, True, value=111)  # loser's success: dropped
+    assert not d.results[3].terminal
+    d.completion(3, 2, True, value=3)
+    assert d.results[3].value == 3
+
+
+def test_task_deadline_marks_failed():
+    """Tentpole knob: a dispatch that never produces a completion (dead
+    launcher) surfaces as FAILED with a timeout error, not a hang."""
+    host = ManualTimerHost()
+    d, _ = make_driver(one_array(), RetryPolicy(task_deadline=5.0,
+                                                scan_period=1.0), host)
+    d.start()                            # dispatch recorded; nothing returns
+    host.advance(4.0)
+    assert not d.finished
+    host.advance(3.0)                    # scan at t=6 sees 6.0 > 5.0
+    assert d.finished
+    r = d.result().results[0]
+    assert r.status == FAILED
+    assert "deadline" in r.error
+    ev = d.events.of(COMPLETE)[-1]
+    assert ev.ok is False and ev.detail.get("timeout") is True
+
+
+def test_dispatch_error_is_attempt_failure():
+    """A raising dispatch_one (closed pool, dead backend) consumes retry
+    budget and terminates FAILED instead of crashing a timer thread."""
+    host = ManualTimerHost()
+
+    def boom(driver, index, attempt, straggler):
+        raise RuntimeError("pool closed")
+
+    arr = one_array()
+    d = ArrayDriver(arr, None, RetryPolicy(max_retries=1, backoff=1.0),
+                    EventLog(), host, dispatch_one=boom)
+    d.start()
+    assert not d.finished                # first failure: retry in backoff
+    host.advance(1.0)
+    assert d.finished
+    r = d.result().results[0]
+    assert r.status == FAILED and r.attempts == 2
+    assert "dispatch failed" in r.error and "pool closed" in r.error
+
+
+def test_sync_timer_host_virtual_clock():
+    host = SyncTimerHost(sleep=False)
+    t0 = host.now()
+    fired = []
+    host.call_later(5.0, lambda: fired.append(host.now()))
+    h = host.call_later(1.0, lambda: fired.append("cancelled"))
+    host.cancel(h)
+    host.drain(lambda: False)
+    assert fired and fired[0] >= t0 + 5.0
+    assert "cancelled" not in fired      # virtual: no real 5 s elapsed
+
+
+def test_sim_task_deadline_fails_instead_of_waiting():
+    """Deadline semantics hold on the sim backend too: a 100 s task under
+    a 10 s deadline ends FAILED at ~10 simulated seconds."""
+    from repro.exec import get_backend
+    g = TaskGraph("slow")
+    g.map(lambda p, i: 1, [{}], name="a", work_seconds=100.0)
+    res = g.run(get_backend("sim"),
+                RetryPolicy(max_retries=0, task_deadline=10.0,
+                            scan_period=1.0))
+    r = res["a"].results[0]
+    assert r.status == FAILED and "deadline" in r.error
+    assert res["a"].summary.makespan < 100.0
+
+
+# --------------------------------------------------------------------------
+# WorkerPool: closed-pool and dead-launcher regressions
+# --------------------------------------------------------------------------
+
+
+def test_submit_after_close_raises():
+    """Regression (bug 1): submit on a closed pool used to return silently,
+    so the task never produced a result and gather blocked forever."""
+    pool = WorkerPool(n_launchers=1, workers_per_launcher=1)
+    pool.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        pool.submit({"id": "x:a:0:1", "expr": "1"})
+
+
+def _wait_dead(pool, idx, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        with pool._lock:
+            if pool._dead[idx]:
+                return True
+        time.sleep(0.02)
+    return False
+
+
+def test_dead_launcher_excluded_and_submit_raises():
+    """Regression (bug 4): after a launcher crash (stdout EOF) the pool
+    kept routing submits to it; now it is marked dead and submit raises
+    once no live launcher remains."""
+    pool = WorkerPool(n_launchers=1, workers_per_launcher=1)
+    try:
+        pool.launchers[0].kill()
+        assert _wait_dead(pool, 0), "reader never marked launcher dead"
+        with pytest.raises(RuntimeError, match="live launcher"):
+            pool.submit({"id": "x:a:0:1", "expr": "1"})
+    finally:
+        pool.close()
+
+
+def test_dead_pool_run_graph_fails_fast_not_hang():
+    """End to end: with every launcher dead, run_graph returns FAILED
+    tasks (dispatch errors through the retry budget) instead of hanging."""
+    with ProcPoolBackend(n_launchers=1, workers_per_launcher=1) as b:
+        pool = b._ensure_pool()
+        pool.launchers[0].kill()
+        assert _wait_dead(pool, 0)
+        g = TaskGraph("dead")
+        g.map(cmd="params['x']", params=[{"x": 1}, {"x": 2}], name="a")
+        res = g.run(b, RetryPolicy(max_retries=1, backoff=0.01,
+                                   scan_period=0.05))
+    assert not res.all_ok
+    for r in res["a"].results:
+        assert r.status == FAILED
+        assert "dispatch failed" in r.error
+
+
+def test_task_deadline_bounds_lost_results():
+    """A task whose result is lost in flight (worker still holds it past
+    the deadline) comes back FAILED within ~deadline, not never."""
+    with ProcPoolBackend(n_launchers=1, workers_per_launcher=1) as b:
+        g = TaskGraph("lost")
+        g.map(cmd="time.sleep(1.5) or params['x']", params=[{"x": 7}],
+              name="a")
+        t0 = time.monotonic()
+        res = g.run(b, RetryPolicy(max_retries=0, task_deadline=0.3,
+                                   scan_period=0.05))
+        elapsed = time.monotonic() - t0
+    r = res["a"].results[0]
+    assert r.status == FAILED and "deadline" in r.error
+    assert elapsed < 1.4                 # returned before the sleep ended
+
+
+# --------------------------------------------------------------------------
+# cross-graph routing on a reused pool
+# --------------------------------------------------------------------------
+
+
+def test_late_result_from_previous_graph_not_routed():
+    """Regression (bug 3): a result line carrying a previous run's task id
+    (same array name!) must not be routed into the current graph — and
+    after a run ends the pool's handler is reset, so late lines are
+    dropped at the pool."""
+    with ProcPoolBackend(n_launchers=1, workers_per_launcher=2) as b:
+        g1 = TaskGraph("g1")
+        g1.map(cmd="params['x'] + 1", params=[{"x": x} for x in range(3)],
+               name="a")
+        r1 = g1.run(b, RetryPolicy())
+        assert r1["a"].values == [1, 2, 3]
+
+        # graph 2 reuses the pool AND the array name; while it runs, a
+        # "late" line from a previous run arrives (forged nonce)
+        g2 = TaskGraph("g2")
+        g2.map(cmd="time.sleep(0.4) or params['x'] * 10",
+               params=[{"x": x} for x in range(3)], name="a")
+        out = {}
+
+        def run2():
+            out["res"] = g2.run(b, RetryPolicy(max_retries=2, backoff=0.01))
+
+        th = threading.Thread(target=run2)
+        th.start()
+        time.sleep(0.15)                 # g2 in flight
+        b.pool.on_result({"id": "r999999:a:0:1", "ok": False,
+                          "error": "late straggler from a previous run"})
+        th.join(timeout=30)
+        assert not th.is_alive()
+        res = out["res"]
+        # pre-fix: the forged failure passed into task 0 and fired a
+        # spurious retry; now it is dropped on the nonce check
+        assert res["a"].values == [0, 10, 20]
+        assert [r.attempts for r in res["a"].results] == [1, 1, 1]
+        assert len(res.events.of(RETRY)) == 0
+
+        # after run_graph returns the handler is reset: late lines are
+        # swallowed by the pool, never routed into finished drivers
+        b.pool.on_result({"id": "r999999:a:0:1", "ok": True, "value": 9})
+        assert res["a"].values == [0, 10, 20]
