@@ -1,5 +1,5 @@
 # Repo entrypoints. `make test` is the tier-1 verify from ROADMAP.md.
-.PHONY: test test-deps bench-taskarray bench-smoke
+.PHONY: test test-deps bench-taskarray bench-smoke chaos-smoke
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q $(ARGS)
@@ -15,3 +15,14 @@ bench-taskarray:
 # run with BENCH_SMOKE=1 scripts/test.sh.
 bench-smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/bench_taskarray.py --smoke --json-out BENCH_taskarray.json
+
+# Fault-injection conformance under a hard per-test timeout: SIGKILLed
+# launchers, dropped results and refused dispatches must RECOVER, never
+# hang. Uses pytest-timeout when available (requirements-test.txt); opt
+# into it during the tier-1 run with CHAOS_SMOKE=1 scripts/test.sh.
+chaos-smoke:
+	@if python -c "import pytest_timeout" 2>/dev/null; then \
+		PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest tests/test_chaos.py -x -q --timeout=60; \
+	else \
+		PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest tests/test_chaos.py -x -q; \
+	fi

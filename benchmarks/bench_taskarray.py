@@ -17,12 +17,16 @@ unified execution layer so every backend reports the same shape:
     python benchmarks/bench_taskarray.py                 # full
     python benchmarks/bench_taskarray.py --smoke \
         --json-out BENCH_taskarray.json                  # make bench-smoke
+    python benchmarks/bench_taskarray.py --smoke \
+        --events-out events.jsonl      # spool every backend-graph run's
+                                       # structured event stream to JSONL
 """
 from __future__ import annotations
 
 import argparse
 import json
-from typing import Dict, List
+import os
+from typing import Dict, List, Optional
 
 from repro.core.cluster import Cluster, TX_GREEN
 from repro.core.events import Sim
@@ -57,7 +61,8 @@ def _graph(n_tasks: int, work_seconds: float) -> TaskGraph:
     return g
 
 
-def _backend_graph(name: str, n_tasks: int, **kwargs) -> Dict:
+def _backend_graph(name: str, n_tasks: int,
+                   events_out: Optional[str] = None, **kwargs) -> Dict:
     """Whole-subsystem path: TaskGraph -> exec backend -> unified report."""
     work = 0.5 if name == "sim" else 0.0
     pool_launch = None
@@ -67,6 +72,11 @@ def _backend_graph(name: str, n_tasks: int, **kwargs) -> Dict:
             pool_launch = round(backend.pool.launch_time, 3)
     s = res["tasks"].summary
     assert res.all_ok
+    if events_out:
+        # one growing spool for the whole benchmark run; each record is
+        # tagged with its backend so the streams can be diffed offline
+        res.events.to_jsonl(events_out, append=True,
+                            extra={"backend": name})
     row = {"fig": "taskarray_backend", "backend": name, "tasks": n_tasks,
            "dispatch_tasks_per_s": round(s.dispatch_rate, 1),
            "makespan_s": round(s.makespan, 3),
@@ -87,15 +97,19 @@ def _backend_launch(name: str, n_nodes: int, procs_per_node: int,
 
 def run(sim_tasks: int = 20000, real_tasks: int = 400,
         pool: str = "4x4", launch_nodes: int = 4,
-        launch_procs: int = 8) -> List[Dict]:
+        launch_procs: int = 8,
+        events_out: Optional[str] = None) -> List[Dict]:
     n_launchers, workers = (int(x) for x in pool.split("x"))
+    if events_out and os.path.exists(events_out):
+        os.remove(events_out)           # fresh spool per benchmark run
     rows = [_sim_dispatch(sim_tasks, "two-tier"),
             _sim_dispatch(sim_tasks, "flat"),
-            _backend_graph("sim", sim_tasks // 4),
+            _backend_graph("sim", sim_tasks // 4, events_out=events_out),
             _backend_graph("procpool", real_tasks,
+                           events_out=events_out,
                            n_launchers=n_launchers,
                            workers_per_launcher=workers),
-            _backend_graph("inline", real_tasks),
+            _backend_graph("inline", real_tasks, events_out=events_out),
             _backend_launch("sim", launch_nodes, launch_procs),
             _backend_launch("procpool", launch_nodes, launch_procs),
             _backend_launch("inline", launch_nodes, launch_procs)]
@@ -109,18 +123,24 @@ def main():
                     help="reduced configuration (CI perf-trajectory record)")
     ap.add_argument("--json-out", default=None,
                     help="also write rows as a JSON file")
+    ap.add_argument("--events-out", default=None,
+                    help="spool each backend-graph run's event stream to "
+                         "this JSONL file (records tagged with backend=)")
     args = ap.parse_args()
     if args.smoke:
         rows = run(sim_tasks=5000, real_tasks=64, pool="2x2",
-                   launch_nodes=2, launch_procs=4)
+                   launch_nodes=2, launch_procs=4,
+                   events_out=args.events_out)
     else:
-        rows = run()
+        rows = run(events_out=args.events_out)
     for row in rows:
         print(",".join(f"{k}={v}" for k, v in row.items()))
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump({"smoke": args.smoke, "rows": rows}, f, indent=2)
         print(f"wrote {args.json_out}")
+    if args.events_out:
+        print(f"wrote {args.events_out}")
 
 
 if __name__ == "__main__":

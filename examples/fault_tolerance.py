@@ -2,11 +2,15 @@
 
     PYTHONPATH=src python examples/fault_tolerance.py
 
-Two layers of the story:
+Three layers of the story:
  1. SCHEDULER level (the paper's cluster): a node dies mid-job -> the job is
     requeued and re-placed off the dead node; a straggler is detected and
     re-dispatched.
- 2. TRAINER level (the payload): SIGTERM triggers checkpoint-then-exit; a
+ 2. EXEC level (repro.exec chaos): a FaultPlan SIGKILLs one of two REAL
+    pool launchers mid-array -> the self-healing pool reports the lost
+    in-flight attempts into the driver's fail-fast retry path, respawns
+    the slot, and the run completes with zero failed tasks.
+ 3. TRAINER level (the payload): SIGTERM triggers checkpoint-then-exit; a
     new Trainer resumes from the checkpoint and the loss trajectory matches
     the uninterrupted run exactly (deterministic data by step index).
 """
@@ -16,6 +20,7 @@ import dataclasses
 import os
 import signal
 import tempfile
+import time
 
 import numpy as np
 
@@ -24,7 +29,10 @@ from repro.core.cluster import Cluster, ClusterSpec
 from repro.core.events import Sim
 from repro.core.scheduler import JobState, Scheduler
 from repro.data.pipeline import SyntheticLM
+from repro.exec import (FAULT, KILL_LAUNCHER, LOST, Fault, FaultPlan,
+                        get_backend)
 from repro.launch.mesh import make_host_mesh
+from repro.taskarray import RetryPolicy, TaskGraph
 from repro.train.trainer import Trainer, TrainerConfig
 
 
@@ -48,6 +56,33 @@ def scheduler_level():
           f"{job.straggler_redispatches}, completed at t={job.finished_at:.1f}s "
           f"on nodes {[nd.id for nd in job.nodes]} (node {dead} avoided)")
     print("events:", events)
+
+
+def exec_level():
+    print("\n== exec level (real processes, chaos SIGKILL) ==")
+    n = 8
+    plan = FaultPlan((Fault(KILL_LAUNCHER, launcher=0, after=1),),
+                     n_launchers=2, workers_per_launcher=2)
+    g = TaskGraph("chaos-demo")
+    g.map(cmd="time.sleep(0.2) or params['x'] * params['x']",
+          params=[{"x": x} for x in range(n)], name="sq")
+    with get_backend("procpool", n_launchers=2,
+                     workers_per_launcher=2) as b:
+        t0 = time.monotonic()
+        res = g.run(b, RetryPolicy(max_retries=3, backoff=0.05,
+                                   scan_period=0.1, task_deadline=60.0),
+                    chaos=plan)
+        elapsed = time.monotonic() - t0
+        pool = b.pool
+    assert res.all_ok and res["sq"].values == [x * x for x in range(n)]
+    counts = res.events.counts()
+    print(f"launcher 0 SIGKILLed after 1 completion: "
+          f"{counts.get(LOST, 0)} in-flight attempts reported lost, "
+          f"{counts.get(FAULT, 0)} fault events, "
+          f"pool respawns={pool.respawns}")
+    print(f"array still completed all {n} tasks OK in {elapsed:.1f}s "
+          f"(fail-fast recovery, not the 60s task_deadline)")
+    print(str(res["sq"].summary))
 
 
 def trainer_level():
@@ -96,5 +131,6 @@ def trainer_level():
 
 if __name__ == "__main__":
     scheduler_level()
+    exec_level()
     trainer_level()
     print("\nfault-tolerance demo OK")

@@ -4,6 +4,8 @@
 #   scripts/test.sh tests/x.py    -> pass-through pytest args
 #   BENCH_SMOKE=1 scripts/test.sh -> suite, then the reduced exec-backend
 #                                    benchmark (writes BENCH_taskarray.json)
+#   CHAOS_SMOKE=1 scripts/test.sh -> suite, then the fault-injection
+#                                    conformance pass (make chaos-smoke)
 set -eu
 cd "$(dirname "$0")/.."
 # Suite-level per-test timeout so a regression in the hang class fixed by
@@ -21,4 +23,7 @@ if [ "${BENCH_SMOKE:-0}" = "1" ]; then
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python benchmarks/bench_taskarray.py --smoke \
         --json-out BENCH_taskarray.json
+fi
+if [ "${CHAOS_SMOKE:-0}" = "1" ]; then
+    make chaos-smoke
 fi

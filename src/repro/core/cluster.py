@@ -128,6 +128,15 @@ class Cluster:
         nd.alive = True
         nd.free_cores = nd.spec.cores
 
+    def outage(self, node_id: int, duration: float) -> None:
+        """Node-outage/recovery model (exec.chaos KILL_LAUNCHER on the sim
+        backend): the node dies NOW and revives `duration` simulated
+        seconds later. While down it is excluded from every allocation —
+        retries and new arrays run on reduced capacity, exactly like a
+        respawning launcher slot in the real WorkerPool."""
+        self.kill_node(node_id)
+        self.sim.schedule(duration, lambda: self.revive_node(node_id))
+
     # ---- prepositioning (paper T4) -----------------------------------------
     def preposition(self, app_name: str, nodes: Optional[List[Node]] = None):
         for nd in (nodes or self.nodes):

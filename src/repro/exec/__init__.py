@@ -32,8 +32,12 @@ core.realproc.compare) remain importable as deprecation shims.
 """
 from __future__ import annotations
 
-from .base import (COMPLETE, DISPATCH, READY, RETRY, SUBMIT, BackendBase,
-                   EventLog, ExecBackend, ExecEvent, LaunchPlan, LaunchReport)
+from .base import (COMPLETE, DISPATCH, FAULT, LOST, READY, RESPAWN, RETRY,
+                   SUBMIT, BackendBase, EventLog, ExecBackend, ExecEvent,
+                   LaunchPlan, LaunchReport)
+from .chaos import (DELAY_NODE, DROP_RESULT, FAIL_DISPATCH, FAULT_KINDS,
+                    HANG_WORKER, KILL_LAUNCHER, ChaosDispatchError, Fault,
+                    FaultPlan)
 from .driver import (ArrayDriver, SimTimerHost, SyncTimerHost,
                      ThreadTimerHost, TimerHost)
 from .pool import LAUNCHER_SRC, WORKER_SRC, ReadinessTimeout, WorkerPool
@@ -73,8 +77,12 @@ def __getattr__(name):
 
 __all__ = [
     "SUBMIT", "DISPATCH", "READY", "COMPLETE", "RETRY",
+    "FAULT", "LOST", "RESPAWN",
     "ExecEvent", "EventLog", "LaunchPlan", "LaunchReport", "ExecBackend",
     "BackendBase", "WORKER_SRC", "LAUNCHER_SRC", "WorkerPool",
     "ReadinessTimeout", "SimBackend", "ProcPoolBackend", "InlineBackend",
     "get_backend",
+    "Fault", "FaultPlan", "ChaosDispatchError", "FAULT_KINDS",
+    "KILL_LAUNCHER", "HANG_WORKER", "DROP_RESULT", "FAIL_DISPATCH",
+    "DELAY_NODE",
 ]

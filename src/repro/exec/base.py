@@ -13,9 +13,15 @@ Event vocabulary (the timestamps the paper's Figures 4-7 are built from):
   ready      a launched process/node reported up (launch-measurement runs)
   complete   a task/launch reached a terminal state (`ok` says which)
   retry      a failure retry or straggler duplicate was issued
+  fault      a fault fired: injected chaos, a launcher crash, a failed
+             respawn, an opened circuit breaker (`detail` says which)
+  lost       an in-flight attempt died with its launcher and was reported
+             to the driver's fail-fast retry path (not the deadline)
+  respawn    a dead launcher/node came back (pool respawn, sim outage end)
 """
 from __future__ import annotations
 
+import json
 import threading
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterator, List, Optional, Protocol, \
@@ -26,11 +32,15 @@ DISPATCH = "dispatch"
 READY = "ready"
 COMPLETE = "complete"
 RETRY = "retry"
+FAULT = "fault"
+LOST = "lost"
+RESPAWN = "respawn"
 
 
 @dataclass
 class ExecEvent:
-    kind: str                        # submit|dispatch|ready|complete|retry
+    kind: str                        # submit|dispatch|ready|complete|retry|
+                                     # fault|lost|respawn
     t: float                         # backend clock
     array: Optional[str] = None      # task-array name (graph runs)
     task: Optional[int] = None       # task index within the array
@@ -80,6 +90,46 @@ class EventLog:
     def __iter__(self) -> Iterator[ExecEvent]:
         with self._lock:
             return iter(list(self._events))
+
+    # ---- offline spool (chaos runs, multi-backend diffing) ------------
+    def to_jsonl(self, path: str, append: bool = False,
+                 extra: Optional[Dict[str, Any]] = None) -> int:
+        """Spool the stream to a JSONL file (one event per line) so chaos
+        runs and multi-backend comparisons can be diffed offline. `extra`
+        keys (e.g. {"backend": "sim"}) are merged into every record.
+        Returns the number of events written."""
+        events = list(self)
+        with open(path, "a" if append else "w") as f:
+            for e in events:
+                rec = {"kind": e.kind, "t": e.t, "array": e.array,
+                       "task": e.task, "attempt": e.attempt, "ok": e.ok,
+                       "detail": e.detail}
+                if extra:
+                    rec.update(extra)
+                f.write(json.dumps(rec) + "\n")
+        return len(events)
+
+    @classmethod
+    def from_jsonl(cls, path: str) -> "EventLog":
+        """Load a spooled stream back into an EventLog. Keys beyond the
+        ExecEvent fields (the to_jsonl `extra`) land in `detail`, so a
+        round trip through extra={"backend": ...} stays inspectable."""
+        log = cls()
+        fields = ("kind", "t", "array", "task", "attempt", "ok", "detail")
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                rec = json.loads(line)
+                detail = dict(rec.get("detail") or {})
+                detail.update({k: v for k, v in rec.items()
+                               if k not in fields})
+                log.emit(rec["kind"], rec["t"], array=rec.get("array"),
+                         task=rec.get("task"),
+                         attempt=rec.get("attempt", 1), ok=rec.get("ok"),
+                         detail=detail)
+        return log
 
 
 @dataclass

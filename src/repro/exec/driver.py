@@ -39,6 +39,12 @@ in tests/test_exec_backends.py):
                   time from first submit; exceeded -> FAILED with a
                   timeout error (this is how a dead launcher surfaces as
                   a result instead of an infinite gather wait)
+  lost            a backend that LEARNS an in-flight attempt died with
+                  its launcher reports it through lost(index, attempt):
+                  the attempt fails immediately into the retry machinery
+                  (one backoff, not task_deadline). Stale reports — the
+                  task already terminal, the attempt superseded, or the
+                  task already waiting out a retry backoff — are dropped.
 """
 from __future__ import annotations
 
@@ -52,7 +58,7 @@ from typing import Any, Callable, List, Optional, Protocol, Set, \
 from repro.taskarray.gather import (FAILED, OK, ArrayResult, RetryPolicy,
                                     StragglerDetector, TaskResult, summarize)
 
-from .base import COMPLETE, DISPATCH, RETRY, SUBMIT, EventLog
+from .base import COMPLETE, DISPATCH, LOST, RETRY, SUBMIT, EventLog
 
 
 # --------------------------------------------------------------------------
@@ -133,11 +139,21 @@ class SyncTimerHost:
         if handle is not None:
             handle[3] = False
 
-    def drain(self, done: Callable[[], bool]) -> None:
-        """Fire pending timers in due order until `done()` (or the queue
-        empties — every dispatch is synchronous here, so an empty queue
-        with an unfinished driver would be a driver bug)."""
-        while not done() and self._heap:
+    def drain(self, done: Callable[[], bool], label: str = "driver"
+              ) -> None:
+        """Fire pending timers in due order until `done()`. Every dispatch
+        is synchronous here, so the heap emptying with `done()` still false
+        means a dispatch produced neither a completion nor a timer — a
+        driver/backend bug. That used to return silently (an inline run
+        that 'hung then nothing'); now it raises, naming the work."""
+        while not done():
+            if not self._heap:
+                raise RuntimeError(
+                    f"SyncTimerHost.drain: timer queue empty but {label!r} "
+                    f"is unfinished — a dispatched task produced no "
+                    f"completion and no pending timer (driver/backend bug, "
+                    f"or a dropped result with no task_deadline to catch "
+                    f"it)")
             due, _, fn, active = heapq.heappop(self._heap)
             if not active:
                 continue
@@ -148,6 +164,11 @@ class SyncTimerHost:
                 else:
                     self._offset += wait
             fn()
+
+    def advance(self, seconds: float) -> None:
+        """Fold a virtual delay into the clock (chaos DELAY_NODE on the
+        inline backend: the timestamps shift, no wall time passes)."""
+        self._offset += max(0.0, seconds)
 
 
 # --------------------------------------------------------------------------
@@ -183,6 +204,7 @@ class ArrayDriver:
         self.detector = StragglerDetector(policy.straggler_k,
                                           policy.min_straggler_samples)
         self.straggler_redispatches = 0
+        self.lost_attempts = 0
         self._dispatched_at = [0.0] * array.n_tasks
         self._in_backoff: Set[int] = set()
         self._retry_timers: List[Any] = []
@@ -262,6 +284,28 @@ class ArrayDriver:
                 self._on_failure(index, attempt, error or "task failed", t)
             self._cond.notify_all()
 
+    def lost(self, index: int, attempt: int) -> bool:
+        """Fail-fast report: `attempt` of task `index` died in flight with
+        its launcher and will never produce a completion. Feeds the normal
+        retry machinery immediately (one backoff) instead of waiting out
+        RetryPolicy.task_deadline. Returns True if the report was current
+        and consumed; False if dropped as stale (task terminal, attempt
+        superseded, or the task already sitting in retry backoff)."""
+        with self._cond:
+            r = self.results[index]
+            if self._done or r.terminal or attempt != r.attempts \
+                    or index in self._in_backoff:
+                return False
+            t = self.timers.now()
+            self.lost_attempts += 1
+            self.events.emit(LOST, t, array=self.array.name, task=index,
+                             attempt=attempt)
+            self._on_failure(index, attempt,
+                             f"launcher lost attempt {attempt} in flight",
+                             t)
+            self._cond.notify_all()
+            return True
+
     def wait(self) -> None:
         """Block (wall-clock backends) until every task is terminal."""
         with self._cond:
@@ -280,7 +324,8 @@ class ArrayDriver:
             summary = summarize(
                 self.array.name, self.results, self.t0, t_end,
                 dispatch_seconds=ds,
-                straggler_redispatches=self.straggler_redispatches)
+                straggler_redispatches=self.straggler_redispatches,
+                lost=self.lost_attempts)
             return ArrayResult(self.array.name, self.results, summary)
 
     # ---- internals ----------------------------------------------------

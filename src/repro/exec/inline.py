@@ -26,21 +26,46 @@ from repro.taskarray.api import GraphResult, TaskArray, TaskGraph, \
 from repro.taskarray.dag import topo_order
 from repro.taskarray.gather import RetryPolicy
 
+from typing import Optional as _Optional
+
 from .base import (READY, SUBMIT, BackendBase, EventLog, LaunchPlan,
                    LaunchReport)
+from .chaos import (EFF_DELAY, EFF_DROP, EFF_FAIL_DISPATCH, EFF_LOST,
+                    ChaosDispatchError, FaultPlan, VirtualChaos)
 from .driver import ArrayDriver, SyncTimerHost
 
 
 class _InlineArrayHost:
     """Synchronous dispatch: evaluating the payload IS the dispatch, and
-    the completion is fed back before dispatch_one returns."""
+    the completion is fed back before dispatch_one returns. Chaos effects
+    (the virtual interpretation of a FaultPlan) apply at dispatch time:
+    LOST reports straight into driver.lost(), DROP returns without a
+    completion (the deadline/straggler machinery must rescue the task),
+    FAIL_DISPATCH raises into the driver's dispatch-error retry path."""
 
-    def __init__(self, array: TaskArray, inputs):
+    def __init__(self, array: TaskArray, inputs,
+                 chaos: _Optional[VirtualChaos] = None):
         self.array = array
         self.inputs = inputs
+        self.chaos = chaos
 
     def dispatch_one(self, driver: ArrayDriver, index: int, attempt: int,
                      straggler: bool) -> None:
+        if self.chaos is not None:
+            eff = self.chaos.effect(index, attempt)
+            if eff is not None:
+                self.chaos.applied(eff, driver.timers.now(), index, attempt)
+                if eff.kind == EFF_FAIL_DISPATCH:
+                    raise ChaosDispatchError(
+                        f"chaos: dispatch of task {index} attempt "
+                        f"{attempt} refused")
+                if eff.kind == EFF_LOST:
+                    driver.lost(index, attempt)
+                    return
+                if eff.kind == EFF_DROP:
+                    return               # no completion: deadline path
+                if eff.kind == EFF_DELAY:
+                    driver.timers.advance(eff.seconds)
         if driver.injected(index, attempt):
             driver.completion(index, attempt, False)
             return
@@ -77,17 +102,24 @@ class InlineBackend(BackendBase):
                             events=events)
 
     def run_graph(self, graph: TaskGraph,
-                  policy: Optional[RetryPolicy] = None) -> GraphResult:
+                  policy: Optional[RetryPolicy] = None,
+                  chaos: Optional[FaultPlan] = None) -> GraphResult:
         policy = policy or RetryPolicy()
         events = EventLog()
         done = GraphResult()
         done.events = events
+        first = graph.arrays[0].name if graph.arrays else ""
         for array in topo_order(graph.arrays):
-            host = _InlineArrayHost(array, gather_inputs(array, done))
+            vchaos = None
+            if chaos is not None and chaos.targets(array.name, first):
+                vchaos = VirtualChaos(chaos, array.name, array.n_tasks,
+                                      events)
+            host = _InlineArrayHost(array, gather_inputs(array, done),
+                                    chaos=vchaos)
             timers = SyncTimerHost(sleep=self.sleep)
             driver = ArrayDriver(array, host.inputs, policy, events, timers,
                                  dispatch_one=host.dispatch_one)
             driver.start()
-            timers.drain(lambda d=driver: d.finished)
+            timers.drain(lambda d=driver: d.finished, label=array.name)
             done[array.name] = driver.result()
         return done

@@ -32,12 +32,12 @@ import subprocess
 import sys
 import threading
 import time
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from .base import READY, SUBMIT, EventLog, LaunchReport
+from .base import FAULT, READY, RESPAWN, SUBMIT, EventLog, LaunchReport
 
 WORKER_SRC = r"""
-import json, math, random, sys, time
+import json, math, os, random, sys, time
 sys.stdout.write(json.dumps({"ready": True}) + "\n")
 sys.stdout.flush()
 for line in sys.stdin:
@@ -52,20 +52,35 @@ for line in sys.stdin:
         json.dumps(out)                          # serializability check
     except Exception as e:
         out = {"id": msg["id"], "ok": False, "error": repr(e)}
-    sys.stdout.write(json.dumps(out) + "\n")
-    sys.stdout.flush()
+    try:
+        sys.stdout.write(json.dumps(out) + "\n")
+        sys.stdout.flush()
+    except OSError:
+        # launcher died under us (chaos SIGKILL): nobody is listening and
+        # the parent pool has already reported this attempt lost — exit
+        # quietly, skipping the shutdown flush of the broken pipe
+        os._exit(0)
 """
 
 # One launcher per "node": forks W workers, then multiplexes task lines
 # from the parent onto free workers (a thread per worker serves a shared
 # queue) and funnels result lines back up a single locked stdout.
 LAUNCHER_SRC = r"""
-import json, queue, subprocess, sys, threading
+import json, os, queue, signal, subprocess, sys, threading
 W = int(sys.argv[1])
 workers = [subprocess.Popen([sys.executable, "-c", %r],
                             stdin=subprocess.PIPE, stdout=subprocess.PIPE,
                             text=True, bufsize=1)
            for _ in range(W)]
+
+def _die(*a):
+    # SIGTERM (pool teardown escalating past a hung worker): take the
+    # workers down WITH us so none outlive the launcher as orphans
+    for w in workers:
+        w.kill()
+    os._exit(1)
+
+signal.signal(signal.SIGTERM, _die)
 for w in workers:
     assert json.loads(w.stdout.readline())["ready"]
 sys.stdout.write(json.dumps({"ready": True, "workers": W}) + "\n")
@@ -214,22 +229,46 @@ def launch_once(n_nodes: int, procs_per_node: int, *,
 
 
 class WorkerPool:
-    """The persistent two-tier pool. `submit` routes a task message to the
-    least-loaded LIVE launcher; results arrive on reader threads and are
-    handed to `on_result` (set by the backend). Thread-safe. If any
-    launcher fails to come up within `ready_timeout`, the whole tree is
-    torn down before the error propagates (no abandoned children).
+    """The persistent SELF-HEALING two-tier pool. `submit` routes a task
+    message to the least-loaded LIVE launcher; results arrive on reader
+    threads and are handed to `on_result` (set by the backend).
+    Thread-safe. If any launcher fails to come up within `ready_timeout`,
+    the whole tree is torn down before the error propagates (no abandoned
+    children).
 
     Failure is loud, never silent: submitting to a closed pool raises
     RuntimeError (a silently-dropped task would make the caller's gather
-    wait forever), a launcher whose stdout hits EOF (crash) is marked dead
-    and excluded from routing, and submit raises once no live launcher
-    remains. Results already lost inside a dead launcher surface through
-    the driver's task deadline, not here."""
+    wait forever), and submit raises once no live launcher remains.
+
+    Recovery (the robustness tentpole): every in-flight task id is tracked
+    per launcher, so a launcher whose stdout hits EOF mid-run (crash,
+    SIGKILL) immediately
+
+      1. reports each lost in-flight message through `on_lost` — the
+         backend feeds these to ArrayDriver.lost(), the fail-fast retry
+         path, instead of waiting out RetryPolicy.task_deadline;
+      2. is respawned in place with bounded exponential backoff
+         (`respawn_backoff * respawn_backoff_factor**k`), a circuit
+         breaker after `max_respawn_failures` consecutive failures
+         (the slot is then permanently out — graceful degradation to
+         reduced capacity), and a `on_fault(kind, detail)` notification
+         per crash/respawn/breaker transition (FAULT/RESPAWN events).
+
+    Set respawn=False for the pre-healing semantics: a dead launcher just
+    shrinks capacity forever (some regression tests pin this mode)."""
 
     def __init__(self, n_launchers: int = 2, workers_per_launcher: int = 4,
-                 ready_timeout: float = 30.0):
+                 ready_timeout: float = 30.0, respawn: bool = True,
+                 respawn_backoff: float = 0.05,
+                 respawn_backoff_factor: float = 2.0,
+                 max_respawn_failures: int = 3):
         t0 = time.monotonic()
+        self.workers_per_launcher = workers_per_launcher
+        self.ready_timeout = ready_timeout
+        self.respawn = respawn
+        self.respawn_backoff = respawn_backoff
+        self.respawn_backoff_factor = respawn_backoff_factor
+        self.max_respawn_failures = max_respawn_failures
         self.launchers: List[subprocess.Popen] = []
         try:
             for _ in range(n_launchers):
@@ -241,25 +280,120 @@ class WorkerPool:
         self.launch_time = time.monotonic() - t0
         self.n_workers = n_launchers * workers_per_launcher
         self.on_result: Callable[[dict], None] = lambda msg: None
+        self.on_lost: Callable[[dict], None] = lambda msg: None
+        self.on_fault: Callable[[str, dict], None] = lambda kind, d: None
+        self.crashes = 0                  # launcher EOFs outside close()
+        self.respawns = 0                 # successful slot revivals
         self._outstanding = [0] * n_launchers
+        self._inflight: List[Dict[str, dict]] = [{} for _ in
+                                                 range(n_launchers)]
         self._dead = [False] * n_launchers
+        self._broken = [False] * n_launchers   # circuit breaker open
+        self._all_launchers = list(self.launchers)  # incl. replaced ones
         self._lock = threading.Lock()
         self._closed = False
-        self._readers = [threading.Thread(target=self._read, args=(i,),
+        self._close_evt = threading.Event()
+        self._readers = [threading.Thread(target=self._read, args=(i, lp),
                                           daemon=True)
-                         for i in range(n_launchers)]
+                         for i, lp in enumerate(self.launchers)]
         for t in self._readers:
             t.start()
 
-    def _read(self, idx: int):
-        for line in self.launchers[idx].stdout:
+    # ---- capacity under degradation -----------------------------------
+    @property
+    def live_launchers(self) -> int:
+        with self._lock:
+            return sum(1 for d in self._dead if not d)
+
+    @property
+    def live_workers(self) -> int:
+        return self.live_launchers * self.workers_per_launcher
+
+    def _read(self, idx: int, proc: subprocess.Popen):
+        """One reader per launcher PROCESS (a respawned slot gets a fresh
+        reader bound to the fresh Popen): route results up, and on EOF run
+        the crash protocol — reap, report lost in-flight tasks, respawn."""
+        for line in proc.stdout:
+            try:
+                msg = json.loads(line)
+            except ValueError:
+                continue                  # torn line from a dying launcher
             with self._lock:
-                self._outstanding[idx] -= 1
-            self.on_result(json.loads(line))
-        # EOF: the launcher exited (clean close OR a crash) — stop routing
-        # new tasks to it; its in-flight tasks will never produce results
+                self._outstanding[idx] = max(0, self._outstanding[idx] - 1)
+                self._inflight[idx].pop(msg.get("id"), None)
+            self.on_result(msg)
+        # EOF: the launcher exited — either our clean close or a crash
+        try:
+            proc.wait()                   # immediate reap: never a zombie
+        except OSError:
+            pass
         with self._lock:
             self._dead[idx] = True
+            lost = list(self._inflight[idx].values())
+            self._inflight[idx].clear()
+            self._outstanding[idx] = 0
+            crashed = not self._closed
+            if crashed:
+                self.crashes += 1
+        if not crashed:
+            return
+        self.on_fault(FAULT, {"launcher": idx, "event": "crash",
+                              "lost": len(lost)})
+        for msg in lost:                  # fail-fast, not task_deadline
+            self.on_lost(msg)
+        if self.respawn:
+            self._respawn(idx)
+
+    def _respawn(self, idx: int) -> None:
+        """Bring slot `idx` back: bounded exponential backoff between
+        attempts, circuit breaker after max_respawn_failures consecutive
+        failures (the slot stays dead; capacity is reduced, not the pool
+        killed). Runs on the dead slot's old reader thread."""
+        failures = 0
+        while True:
+            delay = (self.respawn_backoff
+                     * self.respawn_backoff_factor ** failures)
+            if self._close_evt.wait(delay):
+                return                    # pool closing: stand down
+            proc = None
+            try:
+                proc = _spawn_launcher(self.workers_per_launcher)
+                await_ready([proc], self.ready_timeout)
+            except Exception as e:
+                if proc is not None:
+                    teardown([proc])
+                failures += 1
+                self.on_fault(FAULT, {"launcher": idx,
+                                      "event": "respawn-failed",
+                                      "failures": failures,
+                                      "error": repr(e)})
+                if failures >= self.max_respawn_failures:
+                    with self._lock:
+                        self._broken[idx] = True
+                    self.on_fault(FAULT, {"launcher": idx,
+                                          "event": "breaker-open",
+                                          "failures": failures})
+                    return                # degraded: slot permanently out
+                continue
+            with self._lock:
+                if self._closed:
+                    pass                  # lost the race with close()
+                else:
+                    self.launchers[idx] = proc
+                    self._all_launchers.append(proc)
+                    self._dead[idx] = False
+                    self._outstanding[idx] = 0
+                    self.respawns += 1
+                    t = threading.Thread(target=self._read,
+                                         args=(idx, proc), daemon=True)
+                    self._readers.append(t)
+                    t.start()
+                    proc = None
+            if proc is not None:          # closed mid-respawn: reap it
+                teardown([proc])
+                return
+            self.on_fault(RESPAWN, {"launcher": idx})
+            return
 
     def submit(self, msg: dict) -> None:
         with self._lock:
@@ -281,19 +415,44 @@ class WorkerPool:
                     self._dead[idx] = True     # died since last read; reroute
                     continue
                 self._outstanding[idx] += 1
+                if "id" in msg:
+                    self._inflight[idx][msg["id"]] = msg
                 return
 
-    def close(self) -> None:
+    def close(self, grace: float = 5.0) -> None:
+        """Idempotent full teardown, resilient to launchers killed with
+        SIGKILL mid-protocol and to hung workers: graceful stdin-close
+        first, then escalation through SIGTERM (the launcher kills its
+        workers on the way down) to SIGKILL. Every launcher ever spawned —
+        including crashed-and-replaced ones — is wait()ed: no zombies, and
+        the reader join can no longer wedge on a launcher that will never
+        reach EOF on its own."""
         with self._lock:
             if self._closed:
                 return
             self._closed = True
-        for lp in self.launchers:
-            lp.stdin.close()
-        for t in self._readers:
-            t.join()
-        for lp in self.launchers:
-            lp.wait()
+            self._close_evt.set()
+            launchers = list(self._all_launchers)
+            readers = list(self._readers)
+        for lp in launchers:
+            try:
+                if lp.stdin:
+                    lp.stdin.close()
+            except (OSError, ValueError):
+                pass                      # SIGKILLed mid-protocol: the
+                                          # buffered flush hits EPIPE
+        deadline = time.monotonic() + grace
+        for t in readers:
+            t.join(timeout=max(0.1, deadline - time.monotonic()))
+        # escalate: anything still up (hung worker wedging the launcher's
+        # drain loop) is terminated, then killed
+        teardown([lp for lp in launchers if lp.poll() is None])
+        for lp in launchers:
+            lp.wait()                     # full reap, incl. replaced slots
+        with self._lock:
+            readers = list(self._readers)  # a respawn may have raced in
+        for t in readers:
+            t.join()                      # EOF guaranteed after teardown
 
     def __enter__(self):
         return self

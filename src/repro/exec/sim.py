@@ -30,6 +30,9 @@ from repro.taskarray.gather import ArrayResult, RetryPolicy
 
 from .base import (COMPLETE, DISPATCH, READY, SUBMIT, BackendBase,
                    EventLog, LaunchPlan, LaunchReport)
+from .chaos import (DEFAULT_OUTAGE_SECONDS, EFF_DELAY, EFF_DROP,
+                    EFF_FAIL_DISPATCH, EFF_LOST, Fault, FaultPlan,
+                    VirtualChaos)
 from .driver import ArrayDriver, SimTimerHost
 
 
@@ -37,13 +40,25 @@ class _SimArrayHost:
     """The sim side of one ArrayDriver: submit ArrayJobs (one N-task job
     at attempt 1, single-task follow-ups for retries/duplicates) and turn
     scheduler completion events into driver completions, evaluating the
-    payload in-process at completion time."""
+    payload in-process at completion time.
+
+    Chaos effects (the virtual FaultPlan interpretation, shared with the
+    inline backend) apply where the simulated cluster reports each
+    attempt: LOST reports into driver.lost() at the moment the dead
+    launcher would have returned the result, DROP suppresses the
+    completion (deadline/straggler rescue), FAIL_DISPATCH fails the
+    attempt, DELAY re-schedules the completion later. A KILL_LAUNCHER
+    additionally takes the corresponding simulated NODE down for the
+    fault's outage window (Cluster.outage), so retries run on reduced
+    capacity until recovery — the sim twin of a respawning launcher."""
 
     def __init__(self, backend: "SimBackend", sched: Scheduler,
-                 array: TaskArray):
+                 array: TaskArray, chaos: Optional[VirtualChaos] = None):
         self.backend = backend
         self.sched = sched
         self.array = array
+        self.chaos = chaos
+        self._chaos_applied: Set[tuple] = set()
         self.job = None                  # the attempt-1 ArrayJob
 
     def dispatch_all(self, driver: ArrayDriver) -> None:
@@ -74,6 +89,26 @@ class _SimArrayHost:
                    t: float) -> None:
         if not driver.is_current(index, attempt):
             return                       # straggler loser / stale attempt
+        if self.chaos is not None and (index, attempt) \
+                not in self._chaos_applied:
+            eff = self.chaos.effect(index, attempt)
+            if eff is not None:
+                self._chaos_applied.add((index, attempt))
+                self.chaos.applied(eff, t, index, attempt)
+                if eff.kind == EFF_FAIL_DISPATCH:
+                    driver.completion(index, attempt, False,
+                                      error="chaos: dispatch refused", t=t)
+                    return
+                if eff.kind == EFF_LOST:
+                    driver.lost(index, attempt)
+                    return
+                if eff.kind == EFF_DROP:
+                    return               # deadline/straggler must rescue
+                if eff.kind == EFF_DELAY:
+                    self.sched.sim.schedule(
+                        eff.seconds, lambda: self._task_done(
+                            driver, index, attempt, t + eff.seconds))
+                    return
         if driver.injected(index, attempt):
             driver.completion(index, attempt, False, t=t)
             return
@@ -149,7 +184,8 @@ class SimBackend(BackendBase):
                             events=events)
 
     def run_graph(self, graph: TaskGraph,
-                  policy: Optional[RetryPolicy] = None) -> GraphResult:
+                  policy: Optional[RetryPolicy] = None,
+                  chaos: Optional[FaultPlan] = None) -> GraphResult:
         policy = policy or RetryPolicy()
         sim = Sim()
         self.sched = self._make_sched(sim, {a.app for a in graph.arrays})
@@ -159,13 +195,26 @@ class SimBackend(BackendBase):
         done.events = events
         done_arrays: List[TaskArray] = []
         submitted: Set[str] = set()
+        first = graph.arrays[0].name if graph.arrays else ""
+        cluster = self.sched.cluster
+
+        def node_outage(f: Fault) -> None:
+            # the physical half of a virtual KILL_LAUNCHER: the sim node
+            # goes down for the outage window, then recovers (capacity
+            # model only — the event bookkeeping lives in VirtualChaos)
+            cluster.outage(f.launcher % len(cluster.nodes),
+                           f.seconds or DEFAULT_OUTAGE_SECONDS)
 
         def pump():
             for arr in ready_set(graph.arrays, done_arrays):
                 if arr.name in submitted:
                     continue
                 submitted.add(arr.name)
-                host = _SimArrayHost(self, self.sched, arr)
+                vchaos = None
+                if chaos is not None and chaos.targets(arr.name, first):
+                    vchaos = VirtualChaos(chaos, arr.name, arr.n_tasks,
+                                          events, on_kill=node_outage)
+                host = _SimArrayHost(self, self.sched, arr, chaos=vchaos)
                 driver = ArrayDriver(
                     arr, gather_inputs(arr, done), policy, events, timers,
                     dispatch_one=host.dispatch_one,

@@ -145,10 +145,15 @@ class TaskGraph:
     def validate(self) -> None:
         dag.validate(self.arrays)
 
-    def run(self, runner, policy: Optional[RetryPolicy] = None
-            ) -> "GraphResult":
-        """Validate, then hand the whole graph to the runner."""
+    def run(self, runner, policy: Optional[RetryPolicy] = None,
+            chaos=None) -> "GraphResult":
+        """Validate, then hand the whole graph to the runner. `chaos`
+        (an exec.chaos.FaultPlan) is forwarded only when set, so runners
+        predating fault injection keep working."""
         self.validate()
+        if chaos is not None:
+            return runner.run_graph(self, policy or RetryPolicy(),
+                                    chaos=chaos)
         return runner.run_graph(self, policy or RetryPolicy())
 
 

@@ -119,10 +119,14 @@ class ArraySummary:
     dispatch_rate: float             # tasks/s through the dispatch path
     throughput: float                # completed tasks / makespan
     completion_hist: List[int] = field(default_factory=list)  # 10 bins
+    lost: int = 0                    # attempts lost to dead launchers
+    #   (reported through the driver's fail-fast lost() path; each one
+    #   also consumed a retry or ended the task FAILED)
 
     def __str__(self) -> str:
         return (f"[{self.name}] {self.ok}/{self.n_tasks} ok "
                 f"({self.failed} failed, {self.retries} retries, "
+                f"{self.lost} lost, "
                 f"{self.straggler_redispatches} straggler re-dispatches) "
                 f"makespan={self.makespan:.3f}s "
                 f"dispatch={self.dispatch_rate:.0f}/s "
@@ -149,8 +153,8 @@ class ArrayResult:
 
 def summarize(name: str, results: List[TaskResult], t0: float, t_end: float,
               dispatch_seconds: Optional[float] = None,
-              straggler_redispatches: int = 0, bins: int = 10
-              ) -> ArraySummary:
+              straggler_redispatches: int = 0, bins: int = 10,
+              lost: int = 0) -> ArraySummary:
     n = len(results)
     ok = sum(1 for r in results if r.status == OK)
     failed = sum(1 for r in results if r.status == FAILED)
@@ -168,4 +172,5 @@ def summarize(name: str, results: List[TaskResult], t0: float, t_end: float,
                         retries=max(0, retries),
                         straggler_redispatches=straggler_redispatches,
                         makespan=makespan, dispatch_rate=d_rate,
-                        throughput=ok / makespan, completion_hist=hist)
+                        throughput=ok / makespan, completion_hist=hist,
+                        lost=lost)

@@ -1,0 +1,321 @@
+"""exec.chaos conformance: one seeded FaultPlan, three interpretations.
+
+Virtual mode (sim + inline): the SAME plan must produce IDENTICAL terminal
+accounting — per-task (status, attempts) and LOST/RETRY/FAULT/COMPLETE
+event counts — on both backends, by construction of the compiled effect
+map. Physical mode (procpool): a real SIGKILL of a launcher mid-run must
+recover through the self-healing pool (lost-task fail-fast + respawn)
+with ZERO failed tasks, measurably faster than the task_deadline path,
+and leave no zombie process behind. Plus the pool-level recovery units:
+on_lost reporting, respawn, circuit breaker, kill-9-resilient close().
+"""
+from __future__ import annotations
+
+import time
+
+import pytest
+
+from repro.exec import (FAULT, LOST, RESPAWN, RETRY,
+                        DROP_RESULT, FAIL_DISPATCH, KILL_LAUNCHER,
+                        Fault, FaultPlan, WorkerPool, get_backend)
+from repro.exec.base import COMPLETE, EventLog
+from repro.taskarray import RetryPolicy, TaskGraph
+from repro.taskarray.gather import FAILED, OK
+
+# straggler detection off: chaos accounting must come from chaos alone
+NO_STRAG = dict(min_straggler_samples=10 ** 6)
+
+
+def dual_graph(n=8, name="a", work=0.01):
+    g = TaskGraph("chaos")
+    g.map(lambda p, i: p["x"] * p["x"], [{"x": x} for x in range(n)],
+          cmd="params['x'] * params['x']", name=name, work_seconds=work)
+    return g
+
+
+def accounting(res, name="a"):
+    """The cross-backend identity: per-task terminal state + event counts."""
+    counts = res.events.counts()
+    return {
+        "tasks": [(r.status, r.attempts) for r in res[name].results],
+        "lost": counts.get(LOST, 0),
+        "retry": counts.get(RETRY, 0),
+        "fault": counts.get(FAULT, 0),
+        "respawn": counts.get(RESPAWN, 0),
+        "complete": counts.get(COMPLETE, 0),
+        "summary_lost": res[name].summary.lost,
+    }
+
+
+def run_virtual(backend_name, plan, n=8, policy=None):
+    policy = policy or RetryPolicy(max_retries=3, backoff=0.01,
+                                   scan_period=0.05, **NO_STRAG)
+    if backend_name == "inline":
+        b = get_backend("inline", sleep=False)
+    else:
+        b = get_backend("sim")
+    with b:
+        return dual_graph(n).run(b, policy, chaos=plan)
+
+
+# --------------------------------------------------------------------------
+# the plan itself: seeded, deterministic, validated
+# --------------------------------------------------------------------------
+
+
+def test_seeded_plan_reproducible():
+    a = FaultPlan.seeded(7, 16, n_launchers=4, workers_per_launcher=2)
+    b = FaultPlan.seeded(7, 16, n_launchers=4, workers_per_launcher=2)
+    assert a == b and a.seed == 7
+    assert a.compile(16) == b.compile(16)
+
+
+def test_unknown_fault_kind_rejected():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("meteor-strike")
+
+
+def test_kill_compiles_to_inflight_window():
+    plan = FaultPlan((Fault(KILL_LAUNCHER, launcher=1, after=2),),
+                     n_launchers=2, workers_per_launcher=2)
+    effects = plan.compile(10)
+    # tasks routed to launcher 1 (odd), index >= 2, first 2 of them
+    assert sorted(effects) == [(3, 1), (5, 1)]
+    assert all(e.kind == "lost" for e in effects.values())
+
+
+# --------------------------------------------------------------------------
+# virtual conformance: sim and inline agree exactly
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 42])
+def test_seeded_kill_conformance_sim_vs_inline(seed):
+    """The acceptance identity: one seeded plan, identical terminal
+    accounting on the simulated cluster and the inline interpreter."""
+    n = 8
+    plan = FaultPlan.seeded(seed, n, n_launchers=2, workers_per_launcher=2,
+                            kinds=(KILL_LAUNCHER, FAIL_DISPATCH))
+    acc = {name: accounting(run_virtual(name, plan, n))
+           for name in ("sim", "inline")}
+    assert acc["sim"] == acc["inline"]
+    # and the chaos actually did something: every run loses the victim's
+    # in-flight window and recovers it through LOST -> RETRY
+    assert acc["sim"]["lost"] >= 1
+    assert acc["sim"]["retry"] >= acc["sim"]["lost"]
+    assert all(s == OK for s, _ in acc["sim"]["tasks"])
+    assert acc["sim"]["summary_lost"] == acc["sim"]["lost"]
+
+
+def test_fail_dispatch_conformance_sim_vs_inline():
+    """FAIL_DISPATCH surfaces differently (inline raises from dispatch,
+    sim fails the completion) but must account identically."""
+    plan = FaultPlan((Fault(FAIL_DISPATCH, task=3),), n_launchers=2,
+                     workers_per_launcher=2)
+    acc = {name: accounting(run_virtual(name, plan))
+           for name in ("sim", "inline")}
+    assert acc["sim"] == acc["inline"]
+    assert acc["sim"]["tasks"][3] == (OK, 2)       # one retry consumed
+    assert acc["sim"]["fault"] == 1 and acc["sim"]["retry"] == 1
+
+
+def test_drop_result_deadline_conformance_sim_vs_inline():
+    """A dropped result with no launcher death to blame is only caught by
+    task_deadline — on BOTH virtual backends the task must come back
+    FAILED-by-deadline, never silently missing, never a hang."""
+    plan = FaultPlan((Fault(DROP_RESULT, task=2),), n_launchers=2,
+                     workers_per_launcher=2)
+    # deadline must sit above the sim's launch+dispatch latency (simulated
+    # seconds) so only the DROPPED task trips it; inline folds the wait
+    # into its virtual clock, so the test is still instant
+    policy = RetryPolicy(max_retries=0, backoff=0.01, scan_period=0.05,
+                         task_deadline=10.0, **NO_STRAG)
+    accs = {}
+    for name in ("sim", "inline"):
+        res = run_virtual(name, plan, policy=policy)
+        assert len(res["a"].results) == 8          # nothing dropped
+        r = res["a"].results[2]
+        assert r.status == FAILED and "deadline" in r.error
+        accs[name] = accounting(res)
+    assert accs["sim"] == accs["inline"]
+
+
+def test_lost_budget_exhaustion_conformance():
+    """Killing the same task's every attempt exhausts the retry budget
+    identically: FAILED with the launcher-lost error on both backends."""
+    faults = tuple(Fault(KILL_LAUNCHER, launcher=0, after=0)
+                   for _ in range(1))
+    # a 1-launcher, 1-worker virtual pool: task 0 is the whole in-flight
+    # window, so every retry of task 0 keeps routing to the dead slot
+    plan = FaultPlan(faults, n_launchers=1, workers_per_launcher=1)
+    # attempts 2+ carry no effect in the compiled map -> they succeed;
+    # with max_retries=0 the single lost attempt is already terminal
+    policy = RetryPolicy(max_retries=0, backoff=0.01, scan_period=0.05,
+                         **NO_STRAG)
+    accs = {}
+    for name in ("sim", "inline"):
+        res = run_virtual(name, plan, n=4, policy=policy)
+        r = res["a"].results[0]
+        assert r.status == FAILED and "launcher lost" in r.error
+        accs[name] = accounting(res)
+    assert accs["sim"] == accs["inline"]
+    assert accs["sim"]["lost"] == 1
+
+
+# --------------------------------------------------------------------------
+# physical mode: the self-healing pool under a real SIGKILL
+# --------------------------------------------------------------------------
+
+
+def test_procpool_kill_launcher_recovers_fast_no_failed_no_zombie():
+    """THE acceptance run: two launchers, chaos SIGKILLs one mid-array.
+    The run must complete every task (zero FAILED, correct values), via
+    the lost-task fail-fast path — far inside the 60s task_deadline that
+    the old wait-out-the-deadline recovery would have burned — and close()
+    must reap every launcher ever spawned, including the corpse."""
+    n = 8
+    plan = FaultPlan.seeded(123, n, n_launchers=2, workers_per_launcher=2,
+                            kinds=(KILL_LAUNCHER,))
+    g = TaskGraph("chaos")
+    g.map(cmd="time.sleep(0.25) or params['x'] * params['x']",
+          params=[{"x": x} for x in range(n)], name="a")
+    with get_backend("procpool", n_launchers=2,
+                     workers_per_launcher=2) as b:
+        t0 = time.monotonic()
+        res = g.run(b, RetryPolicy(max_retries=3, backoff=0.05,
+                                   scan_period=0.1, task_deadline=60.0,
+                                   **NO_STRAG), chaos=plan)
+        elapsed = time.monotonic() - t0
+        pool = b.pool
+    assert res.all_ok
+    assert res["a"].values == [x * x for x in range(n)]
+    assert all(r.status == OK for r in res["a"].results)
+    # recovery was the fail-fast path, not the deadline path
+    assert elapsed < 20.0, f"recovery took {elapsed:.1f}s"
+    assert pool.crashes == 1
+    assert res["a"].summary.lost >= 1
+    counts = res.events.counts()
+    assert counts.get(LOST, 0) == res["a"].summary.lost
+    assert counts.get(FAULT, 0) >= 2   # chaos kill + pool crash report
+    # no zombies: every launcher ever spawned (victim included) is reaped
+    assert pool._all_launchers
+    assert all(lp.poll() is not None for lp in pool._all_launchers)
+    # and the IDENTICAL seeded plan yields identical per-task attempt /
+    # lost / retry accounting on the two virtual backends
+    acc = {name: accounting(run_virtual(name, plan, n))
+           for name in ("sim", "inline")}
+    assert acc["sim"] == acc["inline"]
+    assert acc["sim"]["lost"] >= 1
+    assert all(s == OK for s, _ in acc["sim"]["tasks"])
+
+
+def test_pool_reports_lost_and_respawns():
+    """Pool-level self-healing unit: SIGKILL the only launcher while tasks
+    are in flight -> each in-flight id is reported through on_lost, the
+    slot respawns, and the pool serves new work again."""
+    lost, faults = [], []
+    pool = WorkerPool(n_launchers=1, workers_per_launcher=1,
+                      respawn_backoff=0.01)
+    try:
+        pool.on_lost = lost.append
+        pool.on_fault = lambda kind, d: faults.append((kind, d))
+        for i in range(3):
+            pool.submit({"id": f"t:{i}", "expr": "time.sleep(5)",
+                         "params": {}, "inputs": None, "attempt": 1})
+        pool.launchers[0].kill()
+        deadline = time.monotonic() + 15.0
+        while time.monotonic() < deadline and pool.respawns < 1:
+            time.sleep(0.02)
+        assert pool.respawns == 1, f"no respawn; faults={faults}"
+        assert pool.crashes == 1
+        assert sorted(m["id"] for m in lost) == ["t:0", "t:1", "t:2"]
+        kinds = [k for k, _ in faults]
+        assert FAULT in kinds and RESPAWN in kinds
+        assert pool.live_launchers == 1
+        # the respawned slot actually works
+        got = []
+        pool.on_result = got.append
+        pool.submit({"id": "t:new", "expr": "2 + 2", "params": {},
+                     "inputs": None, "attempt": 1})
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline and not got:
+            time.sleep(0.02)
+        assert got and got[0]["value"] == 4
+    finally:
+        pool.close()
+    assert all(lp.poll() is not None for lp in pool._all_launchers)
+
+
+def test_respawn_circuit_breaker_opens(monkeypatch):
+    """If respawn keeps failing, the breaker opens after
+    max_respawn_failures and the pool degrades to reduced capacity
+    instead of spinning forever."""
+    import repro.exec.pool as pool_mod
+    faults = []
+    pool = WorkerPool(n_launchers=2, workers_per_launcher=1,
+                      respawn_backoff=0.01, max_respawn_failures=2)
+    try:
+        pool.on_fault = lambda kind, d: faults.append((kind, d))
+        monkeypatch.setattr(
+            pool_mod, "_spawn_launcher",
+            lambda w: (_ for _ in ()).throw(OSError("fork refused")))
+        pool.launchers[0].kill()
+        deadline = time.monotonic() + 15.0
+        while time.monotonic() < deadline and not pool._broken[0]:
+            time.sleep(0.02)
+        assert pool._broken[0], f"breaker never opened; faults={faults}"
+        events = [d.get("event") for k, d in faults]
+        assert events.count("respawn-failed") == 2
+        assert "breaker-open" in events
+        assert pool.respawns == 0
+        # graceful degradation: the surviving launcher still serves
+        assert pool.live_launchers == 1
+        got = []
+        pool.on_result = got.append
+        pool.submit({"id": "t:x", "expr": "40 + 2", "params": {},
+                     "inputs": None, "attempt": 1})
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline and not got:
+            time.sleep(0.02)
+        assert got and got[0]["value"] == 42
+    finally:
+        pool.close()
+
+
+def test_close_resilient_to_sigkill_mid_protocol():
+    """Satellite regression: SIGKILL every launcher while tasks are in
+    flight (buffered stdin, half-written results), then close() — it must
+    return promptly without raising and leave no zombie behind."""
+    pool = WorkerPool(n_launchers=2, workers_per_launcher=2, respawn=False)
+    for i in range(8):
+        pool.submit({"id": f"t:{i}", "expr": "time.sleep(3)",
+                     "params": {}, "inputs": None, "attempt": 1})
+    for lp in pool.launchers:
+        lp.kill()
+    t0 = time.monotonic()
+    pool.close()
+    assert time.monotonic() - t0 < 10.0
+    assert all(lp.poll() is not None for lp in pool._all_launchers)
+    pool.close()                          # idempotent after carnage
+
+
+# --------------------------------------------------------------------------
+# event spool (satellite: EventLog JSONL round-trip)
+# --------------------------------------------------------------------------
+
+
+def test_eventlog_jsonl_roundtrip(tmp_path):
+    log = EventLog()
+    log.emit(FAULT, 1.5, array="a", task=3, attempt=2,
+             detail={"chaos": KILL_LAUNCHER})
+    log.emit(LOST, 2.0, array="a", task=3, attempt=2)
+    path = tmp_path / "events.jsonl"
+    assert log.to_jsonl(path, extra={"backend": "test"}) == 2
+    back = list(EventLog.from_jsonl(path))
+    assert [e.kind for e in back] == [FAULT, LOST]
+    assert back[0].t == 1.5 and back[0].task == 3
+    assert back[0].detail["chaos"] == KILL_LAUNCHER
+    assert back[0].detail["backend"] == "test"   # extra keys round-trip
+    # append mode stacks runs into one spool
+    log.to_jsonl(path, append=True, extra={"backend": "again"})
+    assert len(EventLog.from_jsonl(path)) == 4

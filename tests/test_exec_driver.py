@@ -207,9 +207,101 @@ def test_sync_timer_host_virtual_clock():
     host.call_later(5.0, lambda: fired.append(host.now()))
     h = host.call_later(1.0, lambda: fired.append("cancelled"))
     host.cancel(h)
-    host.drain(lambda: False)
+    with pytest.raises(RuntimeError, match="unfinished"):
+        host.drain(lambda: False)        # queue empties, done() never true
     assert fired and fired[0] >= t0 + 5.0
     assert "cancelled" not in fired      # virtual: no real 5 s elapsed
+
+
+def test_sync_timer_host_drain_empty_heap_is_loud():
+    """Satellite bugfix: the heap emptying before done() used to return
+    silently, masking driver bugs (a dispatch that produced no completion)
+    as an inline run that 'finished' with pending tasks. Now it raises,
+    naming the unfinished work."""
+    host = SyncTimerHost(sleep=False)
+    with pytest.raises(RuntimeError, match="stuck-array"):
+        host.drain(lambda: False, label="stuck-array")
+    # a drain that reaches done() stays silent, even with timers pending
+    host.call_later(9.0, lambda: None)
+    host.drain(lambda: True, label="fine")
+
+
+# --------------------------------------------------------------------------
+# the lost() fail-fast path (dead launcher -> immediate retry, no deadline)
+# --------------------------------------------------------------------------
+
+
+def test_lost_attempt_feeds_retry_immediately():
+    """A lost in-flight attempt re-dispatches after one backoff, not after
+    task_deadline: the fail-fast path the self-healing pool reports into."""
+    from repro.exec.base import LOST
+    host = ManualTimerHost()
+    arr = one_array()
+    d, calls = make_driver(arr, RetryPolicy(max_retries=2, backoff=0.5,
+                                            task_deadline=60.0), host)
+    d.start()
+    assert d.lost(0, 1) is True
+    host.advance(0.5)                    # backoff, NOT the 60 s deadline
+    d.completion(0, 2, True, value=7)
+    assert d.finished
+    r = d.result().results[0]
+    assert r.status == OK and r.attempts == 2 and r.value == 7
+    assert [c[:2] for c in calls] == [(0, 1), (0, 2)]
+    lost_events = d.events.of(LOST)
+    assert len(lost_events) == 1
+    assert lost_events[0].task == 0 and lost_events[0].attempt == 1
+    assert d.result().summary.lost == 1
+
+
+def test_stale_lost_report_dropped():
+    """lost() for a superseded attempt (or a terminal task) is a no-op:
+    it must not consume retry budget or emit a LOST event."""
+    from repro.exec.base import LOST
+    host = ManualTimerHost()
+    d, calls = make_driver(one_array(), RetryPolicy(max_retries=2,
+                                                    backoff=0.5), host)
+    d.start()
+    d.completion(0, 1, True, value=1)    # task terminal
+    assert d.lost(0, 1) is False         # stale: task already ok
+    assert d.lost(0, 99) is False        # stale: unknown attempt
+    assert d.finished
+    assert d.result().results[0].status == OK
+    assert len(d.events.of(LOST)) == 0
+    assert d.result().summary.lost == 0
+
+
+def test_lost_budget_exhausted_fails_with_launcher_lost():
+    """Every attempt lost: the retry budget drains through the fail-fast
+    path and the task ends FAILED with a 'launcher lost' error."""
+    host = ManualTimerHost()
+    d, calls = make_driver(one_array(), RetryPolicy(max_retries=1,
+                                                    backoff=0.5), host)
+    d.start()
+    assert d.lost(0, 1)
+    host.advance(0.5)                    # retry -> attempt 2
+    assert d.lost(0, 2)                  # budget exhausted
+    assert d.finished
+    r = d.result().results[0]
+    assert r.status == FAILED and r.attempts == 2
+    assert "launcher lost" in r.error
+    assert d.result().summary.lost == 2
+
+
+def test_lost_during_backoff_ignored():
+    """A lost report landing while the task already sits in retry backoff
+    (the attempt already failed) must not double-charge the budget."""
+    host = ManualTimerHost()
+    arr = one_array(fail_attempts=1)
+    d, calls = make_driver(arr, RetryPolicy(max_retries=1, backoff=1.0), host)
+    d.start()
+    d.completion(0, 1, True)             # injected failure -> backoff
+    assert d.lost(0, 1) is False         # in backoff: ignored
+    host.advance(1.0)
+    d.completion(0, 2, True, value=5)
+    assert d.finished
+    r = d.result().results[0]
+    assert r.status == OK and r.attempts == 2
+    assert d.result().summary.lost == 0
 
 
 def test_sim_task_deadline_fails_instead_of_waiting():
@@ -253,8 +345,9 @@ def _wait_dead(pool, idx, timeout=10.0):
 def test_dead_launcher_excluded_and_submit_raises():
     """Regression (bug 4): after a launcher crash (stdout EOF) the pool
     kept routing submits to it; now it is marked dead and submit raises
-    once no live launcher remains."""
-    pool = WorkerPool(n_launchers=1, workers_per_launcher=1)
+    once no live launcher remains. respawn=False pins the pre-healing
+    degradation mode (a dead slot stays dead)."""
+    pool = WorkerPool(n_launchers=1, workers_per_launcher=1, respawn=False)
     try:
         pool.launchers[0].kill()
         assert _wait_dead(pool, 0), "reader never marked launcher dead"
@@ -265,9 +358,11 @@ def test_dead_launcher_excluded_and_submit_raises():
 
 
 def test_dead_pool_run_graph_fails_fast_not_hang():
-    """End to end: with every launcher dead, run_graph returns FAILED
-    tasks (dispatch errors through the retry budget) instead of hanging."""
-    with ProcPoolBackend(n_launchers=1, workers_per_launcher=1) as b:
+    """End to end: with every launcher dead (and self-healing off),
+    run_graph returns FAILED tasks (dispatch errors through the retry
+    budget) instead of hanging."""
+    with ProcPoolBackend(n_launchers=1, workers_per_launcher=1,
+                         respawn=False) as b:
         pool = b._ensure_pool()
         pool.launchers[0].kill()
         assert _wait_dead(pool, 0)
