@@ -1,8 +1,16 @@
 # Repo entrypoints. `make test` is the tier-1 verify from ROADMAP.md.
-.PHONY: test test-deps bench-taskarray bench-smoke chaos-smoke
+.PHONY: test test-deps lint bench-taskarray bench-smoke chaos-smoke
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q $(ARGS)
+
+# Custom static analysis (repro.analysis, stdlib-ast only, zero deps):
+# lock discipline over the annotated exec classes, event-protocol emit
+# sites, deprecated-shim imports, spawn/teardown pairing. Exceptions live
+# in lint-baseline.txt, each with a one-line justification; stale entries
+# fail. scripts/test.sh runs this by default (opt out with LINT=0).
+lint:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m repro.analysis --baseline lint-baseline.txt
 
 test-deps:
 	python -m pip install -r requirements-test.txt

@@ -1,0 +1,56 @@
+"""Validate + summarize a JSONL event spool against the declared protocol.
+
+    python benchmarks/events_lint.py SPOOL.jsonl [--max-retries N]
+
+Takes the spool `bench_taskarray.py --events-out` writes (multiple
+backend runs appended into one file, each record tagged with its
+backend), splits it back into per-run streams, replays each through
+repro.exec.protocol.validate_trace, and prints one summary row per
+stream — event/task/retry/fault counts and the recorded span. Exit 0
+only if every stream conforms.
+
+This is the first step toward the ROADMAP multi-backend spool merge/diff
+tool: the grouping + per-stream replay here is exactly the frontend a
+diff over two backends' streams needs.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.exec.protocol import check_trace, load_and_group  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="validate an event spool against the exec protocol")
+    ap.add_argument("spool", help="JSONL file from --events-out")
+    ap.add_argument("--max-retries", type=int, default=None,
+                    help="also enforce the per-task retry budget")
+    args = ap.parse_args(argv)
+
+    groups = load_and_group(args.spool)
+    if not groups:
+        print(f"{args.spool}: empty spool")
+        return 1
+    bad = 0
+    for tag in sorted(groups):
+        label = tag or "<untagged>"
+        stats, violations = check_trace(groups[tag],
+                                        max_retries=args.max_retries)
+        row = " ".join(f"{k}={v}" for k, v in stats.row().items())
+        verdict = "ok" if not violations else f"{len(violations)} VIOLATION(S)"
+        print(f"{label:<12} {row}  [{verdict}]")
+        for v in violations:
+            bad += 1
+            print(f"  {label}: {v}")
+    status = "conforms" if not bad else f"{bad} violation(s)"
+    print(f"{args.spool}: {len(groups)} stream(s), {status}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -101,11 +101,12 @@ def ablation_launch() -> List[Dict]:
 
 def real_launch() -> List[Dict]:
     """Methodology check with REAL processes on this host (small counts)."""
-    from repro.core.realproc import compare
+    from repro.exec.pool import launch_once
     rows = []
     for n, p in [(4, 8), (8, 8)]:
-        for r in compare(n, p):
-            rows.append({"fig": "real", "strategy": r.strategy,
+        for topo in ("flat", "two-tier"):
+            r, _procs = launch_once(n, p, topology=topo)
+            rows.append({"fig": "real", "strategy": r.topology,
                          "nodes": n, "procs_per_node": p,
                          "launch_s": round(r.launch_time, 3),
                          "rate_per_s": round(r.launch_rate, 1)})

@@ -6,8 +6,15 @@
 #                                    benchmark (writes BENCH_taskarray.json)
 #   CHAOS_SMOKE=1 scripts/test.sh -> suite, then the fault-injection
 #                                    conformance pass (make chaos-smoke)
+#   LINT=0 scripts/test.sh        -> skip the static-analysis pass that
+#                                    otherwise runs first (make lint)
 set -eu
 cd "$(dirname "$0")/.."
+# Static analysis first: it takes well under a second and catches the
+# concurrency/protocol mistakes the suite only hits probabilistically.
+if [ "${LINT:-1}" != "0" ]; then
+    make lint
+fi
 # Suite-level per-test timeout so a regression in the hang class fixed by
 # ISSUE 8 (gather waiting forever on a lost result) fails fast instead of
 # wedging CI. Gated on the plugin: environments without pytest-timeout

@@ -1,0 +1,23 @@
+"""repro.analysis: custom static checks for the exec layer.
+
+Three stdlib-`ast` checkers (no third-party deps), wired into
+`make lint` with a justified suppression baseline (lint-baseline.txt):
+
+  locks    lock-discipline for classes annotated `# guarded-by:` —
+           unguarded field access, callbacks invoked under a lock,
+           blocking calls under a lock
+  events   every EventLog.emit call site uses a declared protocol kind
+           and passes its required fields (the static half of
+           repro.exec.protocol; validate_trace is the runtime half)
+  api      no new imports of the deprecated realproc/runner_* shims;
+           subprocess spawns paired with teardown
+
+See `python -m repro.analysis --help`.
+"""
+from . import api, common, events, locks  # noqa: F401
+from .common import Finding, apply_baseline, load_baseline  # noqa: F401
+from .runner import check_file, iter_py_files, run  # noqa: F401
+
+__all__ = ["api", "common", "events", "locks", "Finding",
+           "apply_baseline", "load_baseline", "check_file",
+           "iter_py_files", "run"]

@@ -27,6 +27,11 @@ clock (Sim events, threading timers, or a synchronous queue). A backend
 supplies only dispatch callbacks and feeds completions back in, so every
 backend has identical attempt/retry/straggler accounting by construction.
 
+The event stream's legal lifecycle is DECLARED in exec.protocol (one
+state machine), checked statically at every emit call site by
+repro.analysis and at runtime by validate_trace() over any recorded
+stream — in-memory EventLog or JSONL spool.
+
 The legacy names (taskarray.SimRunner/RealRunner/InlineRunner,
 core.realproc.compare) remain importable as deprecation shims.
 """
@@ -41,6 +46,8 @@ from .chaos import (DELAY_NODE, DROP_RESULT, FAIL_DISPATCH, FAULT_KINDS,
 from .driver import (ArrayDriver, SimTimerHost, SyncTimerHost,
                      ThreadTimerHost, TimerHost)
 from .pool import LAUNCHER_SRC, WORKER_SRC, ReadinessTimeout, WorkerPool
+from .protocol import (ProtocolError, TraceStats, Violation, check_trace,
+                       load_and_group, validate_trace)
 
 _BACKENDS = {}
 
@@ -85,4 +92,6 @@ __all__ = [
     "Fault", "FaultPlan", "ChaosDispatchError", "FAULT_KINDS",
     "KILL_LAUNCHER", "HANG_WORKER", "DROP_RESULT", "FAIL_DISPATCH",
     "DELAY_NODE",
+    "ProtocolError", "TraceStats", "Violation", "check_trace",
+    "validate_trace", "load_and_group",
 ]

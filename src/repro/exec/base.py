@@ -18,6 +18,13 @@ Event vocabulary (the timestamps the paper's Figures 4-7 are built from):
   lost       an in-flight attempt died with its launcher and was reported
              to the driver's fail-fast retry path (not the deadline)
   respawn    a dead launcher/node came back (pool respawn, sim outage end)
+
+The LEGAL orderings of these kinds — the per-task attempt lifecycle,
+retry budgets, nothing-after-terminal, respawn-needs-a-prior-fault — are
+declared once in exec.protocol and enforced twice: statically (every
+emit call site must name a declared constant and pass the kind's
+required fields; see repro.analysis) and at runtime
+(protocol.validate_trace replays any EventLog or loaded JSONL spool).
 """
 from __future__ import annotations
 

@@ -196,25 +196,28 @@ class ArrayDriver:
         self.policy = policy
         self.events = events
         self.timers = timers
-        self._dispatch_one = dispatch_one
-        self._dispatch_all = dispatch_all
-        self._on_finish = on_finish
-        self._dispatch_seconds = dispatch_seconds
-        self.results = [TaskResult(i) for i in range(array.n_tasks)]
-        self.detector = StragglerDetector(policy.straggler_k,
-                                          policy.min_straggler_samples)
-        self.straggler_redispatches = 0
-        self.lost_attempts = 0
-        self._dispatched_at = [0.0] * array.n_tasks
-        self._in_backoff: Set[int] = set()
-        self._retry_timers: List[Any] = []
-        self._scan_timer: Any = None
-        self._terminal = 0
-        self._done = False
+        self._dispatch_one = dispatch_one          # analysis: callback
+        self._dispatch_all = dispatch_all          # analysis: callback
+        self._on_finish = on_finish                # analysis: callback
+        self._dispatch_seconds = dispatch_seconds  # analysis: callback
+        self.results = [TaskResult(i)              # guarded-by: self._cond
+                        for i in range(array.n_tasks)]
+        self.detector = StragglerDetector(         # guarded-by: self._cond
+            policy.straggler_k, policy.min_straggler_samples)
+        self.straggler_redispatches = 0            # guarded-by: self._cond
+        self.lost_attempts = 0                     # guarded-by: self._cond
+        self._dispatched_at = [0.0] * array.n_tasks  # guarded-by: self._cond
+        self._in_backoff: Set[int] = set()         # guarded-by: self._cond
+        self._retry_timers: List[Any] = []         # guarded-by: self._cond
+        self._scan_timer: Any = None               # guarded-by: self._cond
+        self._terminal = 0                         # guarded-by: self._cond
+        self._done = False                         # guarded-by: self._cond
+        self._finish_notified = False              # guarded-by: self._cond
         self._cond = threading.Condition(threading.RLock())
-        self.t0 = 0.0
-        self._t_end = 0.0
-        self._dispatch_elapsed: Optional[float] = None
+        self.t0 = 0.0                              # guarded-by: self._cond
+        self._t_end = 0.0                          # guarded-by: self._cond
+        self._dispatch_elapsed: Optional[float] \
+            = None                                 # guarded-by: self._cond
 
     # ---- queries backends use to keep payload evaluation honest -------
     def is_current(self, index: int, attempt: int) -> bool:
@@ -237,13 +240,19 @@ class ArrayDriver:
     # ---- lifecycle ----------------------------------------------------
     def start(self) -> None:
         """Emit submit, dispatch every task at attempt 1, arm the scan."""
-        self.t0 = self.timers.now()
-        for r in self.results:
-            r.attempts = 1
-            r.submitted_at = self.t0
-        self._dispatched_at = [self.t0] * self.array.n_tasks
-        self.events.emit(SUBMIT, self.t0, array=self.array.name,
-                         detail={"n_tasks": self.array.n_tasks})
+        with self._cond:
+            # once the first attempt is on the launch path, backend threads
+            # can reach this driver — the bookkeeping they read must be
+            # published under the lock BEFORE any dispatch happens
+            self.t0 = self.timers.now()
+            for r in self.results:
+                r.attempts = 1
+                r.submitted_at = self.t0
+            self._dispatched_at = [self.t0] * self.array.n_tasks
+            self.events.emit(SUBMIT, self.t0, array=self.array.name,
+                             detail={"n_tasks": self.array.n_tasks})
+        # dispatch with the lock RELEASED: dispatch_one is backend code
+        # (pipe writes, Sim submits) and may re-enter completion()
         if self._dispatch_all is not None:
             self._dispatch_all(self)
         else:
@@ -257,6 +266,7 @@ class ArrayDriver:
             if not self._done:
                 self._scan_timer = self.timers.call_later(
                     self.policy.scan_period, self._scan)
+        self._fire_finish()
 
     def completion(self, index: int, attempt: int, ok: bool,
                    value: Any = None, error: Optional[str] = None,
@@ -283,6 +293,7 @@ class ArrayDriver:
             else:
                 self._on_failure(index, attempt, error or "task failed", t)
             self._cond.notify_all()
+        self._fire_finish()
 
     def lost(self, index: int, attempt: int) -> bool:
         """Fail-fast report: `attempt` of task `index` died in flight with
@@ -304,7 +315,8 @@ class ArrayDriver:
                              f"launcher lost attempt {attempt} in flight",
                              t)
             self._cond.notify_all()
-            return True
+        self._fire_finish()
+        return True
 
     def wait(self) -> None:
         """Block (wall-clock backends) until every task is terminal."""
@@ -314,12 +326,15 @@ class ArrayDriver:
 
     def result(self) -> ArrayResult:
         """The gathered array (valid once finished)."""
+        # consult the backend's dispatch-timing callback BEFORE taking the
+        # lock — it is backend code and may take backend locks of its own
+        override = None
+        if self._dispatch_seconds is not None:
+            override = self._dispatch_seconds()
         with self._cond:
             ds = self._dispatch_elapsed
-            if self._dispatch_seconds is not None:
-                override = self._dispatch_seconds()
-                if override is not None:
-                    ds = override
+            if override is not None:
+                ds = override
             t_end = self._t_end if self._done else self.timers.now()
             summary = summarize(
                 self.array.name, self.results, self.t0, t_end,
@@ -362,18 +377,23 @@ class ArrayDriver:
                 return
             self._in_backoff.discard(index)
             r.attempts += 1
+            attempt = r.attempts
             self._dispatched_at[index] = self.timers.now()
             self.events.emit(RETRY, self._dispatched_at[index],
                              array=self.array.name, task=index,
-                             attempt=r.attempts,
+                             attempt=attempt,
                              detail={"straggler": False})
-            self._dispatch(index, r.attempts, False)
             self._cond.notify_all()
+        # dispatch with the lock released: r.attempts is already bumped, so
+        # a completion racing in for the OLD attempt drops as stale
+        self._dispatch(index, attempt, False)
+        self._fire_finish()
 
     def _scan(self) -> None:
         """Periodic watchdog: per-task wall deadlines, then straggler
         re-dispatch (one duplicate per task; first CURRENT completion
         wins — see the staleness rule above)."""
+        duplicates = []                  # (index, attempt) to dispatch
         with self._cond:
             if self._done:
                 return
@@ -397,27 +417,39 @@ class ArrayDriver:
                         self._finish_one()
             if self._done:
                 self._cond.notify_all()
-                return
-            thr = self.detector.threshold()
-            if thr is not None:
-                for i, r in enumerate(self.results):
-                    if r.terminal or r.redispatched or i in self._in_backoff:
-                        continue
-                    if now - self._dispatched_at[i] > thr:
-                        r.redispatched = True
-                        r.attempts += 1
-                        self.straggler_redispatches += 1
-                        self._dispatched_at[i] = now
-                        self.events.emit(RETRY, now, array=self.array.name,
-                                         task=i, attempt=r.attempts,
-                                         detail={"straggler": True})
-                        self._dispatch(i, r.attempts, True)
-            self._scan_timer = self.timers.call_later(
-                self.policy.scan_period, self._scan)
-            self._cond.notify_all()
+            else:
+                thr = self.detector.threshold()
+                if thr is not None:
+                    for i, r in enumerate(self.results):
+                        if r.terminal or r.redispatched \
+                                or i in self._in_backoff:
+                            continue
+                        if now - self._dispatched_at[i] > thr:
+                            r.redispatched = True
+                            r.attempts += 1
+                            self.straggler_redispatches += 1
+                            self._dispatched_at[i] = now
+                            self.events.emit(RETRY, now,
+                                             array=self.array.name,
+                                             task=i, attempt=r.attempts,
+                                             detail={"straggler": True})
+                            duplicates.append((i, r.attempts))
+                self._scan_timer = self.timers.call_later(
+                    self.policy.scan_period, self._scan)
+                self._cond.notify_all()
+        # straggler duplicates go out with the lock released; the attempt
+        # bump above already makes the superseded attempt stale
+        for i, attempt in duplicates:
+            self._dispatch(i, attempt, True)
+        self._fire_finish()
 
-    def _finish_one(self) -> None:
-        # caller holds self._cond
+    def _finish_one(self) -> None:    # guarded-by: self._cond
+        """Caller holds self._cond. Marks progress; the LAST terminal task
+        flips _done and cancels timers, but the user's on_finish callback
+        fires later, from _fire_finish(), OUTSIDE the lock — invoking user
+        code under _cond was a self-deadlock trap (a callback calling
+        result()/wait() re-enters; one starting new work on another thread
+        that needs this driver deadlocks for real)."""
         self._terminal += 1
         if self._terminal == len(self.results):
             self._done = True
@@ -426,8 +458,17 @@ class ArrayDriver:
             for h in self._retry_timers:
                 self.timers.cancel(h)
             self._cond.notify_all()
-            if self._on_finish is not None:
-                self._on_finish(self.result())
+
+    def _fire_finish(self) -> None:
+        """Invoke on_finish exactly once, after the lock is released, on
+        whichever thread drove the final task terminal."""
+        with self._cond:
+            if not self._done or self._finish_notified:
+                return
+            self._finish_notified = True
+            fn = self._on_finish
+        if fn is not None:
+            fn(self.result())
 
 
 __all__ = ["ArrayDriver", "TimerHost", "SimTimerHost", "ThreadTimerHost",

@@ -269,7 +269,7 @@ class WorkerPool:
         self.respawn_backoff = respawn_backoff
         self.respawn_backoff_factor = respawn_backoff_factor
         self.max_respawn_failures = max_respawn_failures
-        self.launchers: List[subprocess.Popen] = []
+        self.launchers: List[subprocess.Popen] = []  # guarded-by: self._lock
         try:
             for _ in range(n_launchers):
                 self.launchers.append(_spawn_launcher(workers_per_launcher))
@@ -279,23 +279,29 @@ class WorkerPool:
             raise
         self.launch_time = time.monotonic() - t0
         self.n_workers = n_launchers * workers_per_launcher
-        self.on_result: Callable[[dict], None] = lambda msg: None
-        self.on_lost: Callable[[dict], None] = lambda msg: None
-        self.on_fault: Callable[[str, dict], None] = lambda kind, d: None
-        self.crashes = 0                  # launcher EOFs outside close()
-        self.respawns = 0                 # successful slot revivals
-        self._outstanding = [0] * n_launchers
-        self._inflight: List[Dict[str, dict]] = [{} for _ in
-                                                 range(n_launchers)]
-        self._dead = [False] * n_launchers
-        self._broken = [False] * n_launchers   # circuit breaker open
-        self._all_launchers = list(self.launchers)  # incl. replaced ones
+        # handler fields are REASSIGNED between runs (set_handlers), so a
+        # reader thread must snapshot them under the lock and invoke the
+        # snapshot after releasing it — never call self.on_*() directly
+        self.on_result: Callable[[dict], None] \
+            = lambda msg: None  # guarded-by: self._lock (analysis: callback)
+        self.on_lost: Callable[[dict], None] \
+            = lambda msg: None  # guarded-by: self._lock (analysis: callback)
+        self.on_fault: Callable[[str, dict], None] \
+            = lambda kind, d: None  # guarded-by: self._lock (analysis: callback)
+        self.crashes = 0    # guarded-by: self._lock — EOFs outside close()
+        self.respawns = 0   # guarded-by: self._lock — slot revivals
+        self._outstanding = [0] * n_launchers     # guarded-by: self._lock
+        self._inflight: List[Dict[str, dict]] \
+            = [{} for _ in range(n_launchers)]    # guarded-by: self._lock
+        self._dead = [False] * n_launchers        # guarded-by: self._lock
+        self._broken = [False] * n_launchers      # guarded-by: self._lock
+        self._all_launchers = list(self.launchers)  # guarded-by: self._lock
         self._lock = threading.Lock()
-        self._closed = False
+        self._closed = False                      # guarded-by: self._lock
         self._close_evt = threading.Event()
-        self._readers = [threading.Thread(target=self._read, args=(i, lp),
-                                          daemon=True)
-                         for i, lp in enumerate(self.launchers)]
+        self._readers = [threading.Thread(  # guarded-by: self._lock
+            target=self._read, args=(i, lp), daemon=True)
+            for i, lp in enumerate(self.launchers)]
         for t in self._readers:
             t.start()
 
@@ -309,6 +315,28 @@ class WorkerPool:
     def live_workers(self) -> int:
         return self.live_launchers * self.workers_per_launcher
 
+    def set_handlers(self,
+                     on_result: Optional[Callable[[dict], None]] = None,
+                     on_lost: Optional[Callable[[dict], None]] = None,
+                     on_fault: Optional[Callable[[str, dict], None]] = None
+                     ) -> None:
+        """Swap the routing handlers atomically (None resets one to the
+        no-op). Backends that reuse a pool across graph runs install the
+        run's router here and reset it on the way out; the write happens
+        under the pool lock so a reader thread snapshotting mid-swap sees
+        either the old or the new handler, never a torn pair."""
+        with self._lock:
+            self.on_result = on_result or (lambda msg: None)
+            self.on_lost = on_lost or (lambda msg: None)
+            self.on_fault = on_fault or (lambda kind, d: None)
+
+    def _notify_fault(self, kind: str, detail: dict) -> None:
+        """Snapshot on_fault under the lock, invoke it outside — a handler
+        that called back into submit()/close() would deadlock otherwise."""
+        with self._lock:
+            handler = self.on_fault
+        handler(kind, detail)
+
     def _read(self, idx: int, proc: subprocess.Popen):
         """One reader per launcher PROCESS (a respawned slot gets a fresh
         reader bound to the fresh Popen): route results up, and on EOF run
@@ -321,7 +349,10 @@ class WorkerPool:
             with self._lock:
                 self._outstanding[idx] = max(0, self._outstanding[idx] - 1)
                 self._inflight[idx].pop(msg.get("id"), None)
-            self.on_result(msg)
+                on_result = self.on_result
+            # handler runs with the lock RELEASED: it is backend/user code
+            # (ArrayDriver routing) and may call submit() for a retry
+            on_result(msg)
         # EOF: the launcher exited — either our clean close or a crash
         try:
             proc.wait()                   # immediate reap: never a zombie
@@ -335,12 +366,13 @@ class WorkerPool:
             crashed = not self._closed
             if crashed:
                 self.crashes += 1
+            on_lost = self.on_lost
         if not crashed:
             return
-        self.on_fault(FAULT, {"launcher": idx, "event": "crash",
-                              "lost": len(lost)})
+        self._notify_fault(FAULT, {"launcher": idx, "event": "crash",
+                                   "lost": len(lost)})
         for msg in lost:                  # fail-fast, not task_deadline
-            self.on_lost(msg)
+            on_lost(msg)
         if self.respawn:
             self._respawn(idx)
 
@@ -363,16 +395,16 @@ class WorkerPool:
                 if proc is not None:
                     teardown([proc])
                 failures += 1
-                self.on_fault(FAULT, {"launcher": idx,
-                                      "event": "respawn-failed",
-                                      "failures": failures,
-                                      "error": repr(e)})
+                self._notify_fault(FAULT, {"launcher": idx,
+                                           "event": "respawn-failed",
+                                           "failures": failures,
+                                           "error": repr(e)})
                 if failures >= self.max_respawn_failures:
                     with self._lock:
                         self._broken[idx] = True
-                    self.on_fault(FAULT, {"launcher": idx,
-                                          "event": "breaker-open",
-                                          "failures": failures})
+                    self._notify_fault(FAULT, {"launcher": idx,
+                                               "event": "breaker-open",
+                                               "failures": failures})
                     return                # degraded: slot permanently out
                 continue
             with self._lock:
@@ -392,7 +424,7 @@ class WorkerPool:
             if proc is not None:          # closed mid-respawn: reap it
                 teardown([proc])
                 return
-            self.on_fault(RESPAWN, {"launcher": idx})
+            self._notify_fault(RESPAWN, {"launcher": idx})
             return
 
     def submit(self, msg: dict) -> None:
@@ -406,7 +438,8 @@ class WorkerPool:
                 if not live:
                     raise RuntimeError(
                         "no live launchers (all exited); pool is unusable")
-                idx = min(live, key=lambda i: self._outstanding[i])
+                outstanding = self._outstanding    # bound under the lock
+                idx = min(live, key=lambda i: outstanding[i])
                 lp = self.launchers[idx]
                 try:
                     lp.stdin.write(line)

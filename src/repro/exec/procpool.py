@@ -36,6 +36,7 @@ result line, a raised dispatch.
 from __future__ import annotations
 
 import itertools
+import threading
 import time
 from typing import Dict, Optional, Set, Tuple
 
@@ -68,9 +69,14 @@ class _ChaosMonitor:
         self.pool = pool
         self.events = events
         self.target = target
-        self.completions = 0
-        self._kills = [f for f in plan.faults if f.kind == KILL_LAUNCHER]
-        self._dropped: Set[Tuple[int, int]] = set()
+        # deliver() runs on the pool's reader threads — one PER launcher,
+        # so with >1 launcher the counters race without their own lock
+        self.completions = 0                      # guarded-by: self._lock
+        self._kills = [f for f in plan.faults     # guarded-by: self._lock
+                       if f.kind == KILL_LAUNCHER]
+        self._dropped: Set[Tuple[int, int]] \
+            = set()                               # guarded-by: self._lock
+        self._lock = threading.Lock()
 
     def _effects(self, kind: str, index: int, attempt: int):
         for f in self.plan.faults:
@@ -108,26 +114,32 @@ class _ChaosMonitor:
         result line is chaos-dropped. Also the kill trigger: launcher L
         dies (real SIGKILL) once `after` completions have been seen."""
         f = self._effects(DROP_RESULT, index, attempt)
-        if f is not None and (index, attempt) not in self._dropped:
-            self._dropped.add((index, attempt))
-            self.events.emit(FAULT, time.monotonic(), array=self.target,
-                             task=index, attempt=attempt,
-                             detail={"chaos": DROP_RESULT})
-            return False
-        self.completions += 1
-        for f in list(self._kills):
-            if self.completions >= max(1, f.after):
-                self._kills.remove(f)
+        fire = []                         # kills triggered by this result
+        with self._lock:
+            if f is not None and (index, attempt) not in self._dropped:
+                self._dropped.add((index, attempt))
                 self.events.emit(FAULT, time.monotonic(),
-                                 array=self.target,
-                                 detail={"chaos": KILL_LAUNCHER,
-                                         "launcher": f.launcher,
-                                         "after": self.completions})
-                try:
-                    self.pool.launchers[f.launcher
-                                        % len(self.pool.launchers)].kill()
-                except OSError:
-                    pass
+                                 array=self.target, task=index,
+                                 attempt=attempt,
+                                 detail={"chaos": DROP_RESULT})
+                return False
+            self.completions += 1
+            for f in list(self._kills):
+                if self.completions >= max(1, f.after):
+                    self._kills.remove(f)
+                    fire.append((f, self.completions))
+        # the SIGKILL itself happens with the lock released: kill() can
+        # block, and the victim's reader thread may call back in here
+        for f, seen in fire:
+            self.events.emit(FAULT, time.monotonic(), array=self.target,
+                             detail={"chaos": KILL_LAUNCHER,
+                                     "launcher": f.launcher,
+                                     "after": seen})
+            try:
+                self.pool.launchers[f.launcher
+                                    % len(self.pool.launchers)].kill()
+            except OSError:
+                pass
         return True
 
 
@@ -244,9 +256,8 @@ class ProcPoolBackend(BackendBase):
         def report_fault(kind: str, detail: dict):
             events.emit(kind, time.monotonic(), detail=detail)
 
-        pool.on_result = route
-        pool.on_lost = report_lost
-        pool.on_fault = report_fault
+        pool.set_handlers(on_result=route, on_lost=report_lost,
+                          on_fault=report_fault)
         done = GraphResult()
         done.events = events
         try:
@@ -268,9 +279,7 @@ class ProcPoolBackend(BackendBase):
         finally:
             # a reused pool must not keep routing into this (finished)
             # run: late results are dropped at the pool, not mis-routed
-            pool.on_result = lambda msg: None
-            pool.on_lost = lambda msg: None
-            pool.on_fault = lambda kind, detail: None
+            pool.set_handlers()
         return done
 
     def close(self):

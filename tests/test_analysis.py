@@ -1,0 +1,550 @@
+"""repro.analysis checker tests: each known-bad fixture trips EXACTLY its
+lint, each known-good fixture stays clean, the runtime protocol machine
+accepts/rejects the right sequences, the suppression baseline behaves,
+and — the acceptance bar — the real repo with the real baseline is
+lint-clean.
+"""
+from __future__ import annotations
+
+import io
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import api, events, locks, runner
+from repro.analysis.common import (BaselineError, apply_baseline,
+                                   load_baseline)
+from repro.exec.base import (COMPLETE, DISPATCH, FAULT, LOST, RESPAWN,
+                             RETRY, SUBMIT, EventLog)
+from repro.exec.protocol import ProtocolError, check_trace, validate_trace
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def rules(findings):
+    return [f.rule for f in findings]
+
+
+def lock_check(body):
+    return locks.check_source(textwrap.dedent(body))
+
+
+# --------------------------------------------------------------------------
+# lock-discipline checker
+# --------------------------------------------------------------------------
+
+
+GOOD_LOCKED = """
+    import threading
+
+    class Pool:
+        def __init__(self):
+            self.jobs = []          # guarded-by: self._lock
+            self._lock = threading.Lock()
+
+        def add(self, j):
+            with self._lock:
+                self.jobs.append(j)
+
+        def snapshot(self):
+            with self._lock:
+                return list(self.jobs)
+"""
+
+
+def test_good_lock_usage_is_clean():
+    assert lock_check(GOOD_LOCKED) == []
+
+
+BAD_PEEK = GOOD_LOCKED + """
+        def peek(self):
+            return self.jobs[-1]
+"""
+
+
+def test_unguarded_read_flagged():
+    found = lock_check(BAD_PEEK)
+    assert rules(found) == ["guarded-field"]
+    assert found[0].subject == "jobs"
+    assert found[0].qualname == "Pool.peek"
+
+
+def test_unguarded_write_flagged():
+    found = lock_check("""
+    import threading
+
+    class C:
+        def __init__(self):
+            self.n = 0              # guarded-by: self._lock
+            self._lock = threading.Lock()
+
+        def bump(self):
+            self.n += 1
+""")
+    assert rules(found) == ["guarded-field"]
+
+
+def test_blocking_call_under_lock_flagged():
+    found = lock_check("""
+    import threading, time
+
+    class C:
+        def __init__(self):
+            self.n = 0              # guarded-by: self._lock
+            self._lock = threading.Lock()
+
+        def slow(self):
+            with self._lock:
+                time.sleep(1.0)
+                self.n += 1
+""")
+    assert rules(found) == ["blocking-under-lock"]
+    assert found[0].subject == "sleep"
+
+
+def test_queue_get_under_lock_flagged_dict_get_not():
+    src = """
+    import threading
+
+    class C:
+        def __init__(self):
+            self.meta = {}          # guarded-by: self._lock
+            self._lock = threading.Lock()
+            self.q = None
+
+        def drain(self):
+            with self._lock:
+                x = self.meta.get("k", 0)      # dict.get: fine
+                return self.q.get()            # queue.get: blocks
+"""
+    found = lock_check(src)
+    assert rules(found) == ["blocking-under-lock"]
+    assert found[0].subject == "get"
+
+
+def test_callback_under_lock_flagged_snapshot_idiom_clean():
+    bad = lock_check("""
+    import threading
+
+    class C:
+        def __init__(self):
+            self.on_done = None  # guarded-by: self._lock (analysis: callback)
+            self._lock = threading.Lock()
+
+        def finish(self):
+            with self._lock:
+                self.on_done("x")
+""")
+    assert rules(bad) == ["callback-under-lock"]
+    assert bad[0].subject == "on_done"
+    good = lock_check("""
+    import threading
+
+    class C:
+        def __init__(self):
+            self.on_done = None  # guarded-by: self._lock (analysis: callback)
+            self._lock = threading.Lock()
+
+        def finish(self):
+            with self._lock:
+                handler = self.on_done
+            handler("x")
+""")
+    assert good == []
+
+
+def test_calling_guarded_callback_without_lock_is_a_guarded_read():
+    # the two rules together force the snapshot idiom: lock-free direct
+    # invocation reads the handler field unguarded
+    found = lock_check("""
+    import threading
+
+    class C:
+        def __init__(self):
+            self.on_done = None  # guarded-by: self._lock (analysis: callback)
+            self._lock = threading.Lock()
+
+        def finish(self):
+            self.on_done("x")
+""")
+    assert rules(found) == ["guarded-field"]
+
+
+def test_method_level_guard_annotation_honored():
+    found = lock_check("""
+    import threading
+
+    class C:
+        def __init__(self):
+            self.n = 0              # guarded-by: self._lock
+            self._lock = threading.Lock()
+
+        def _bump_locked(self):     # guarded-by: self._lock
+            self.n += 1
+""")
+    assert found == []
+
+
+def test_condvar_wait_on_held_guard_exempt():
+    found = lock_check("""
+    import threading
+
+    class C:
+        def __init__(self):
+            self.done = False       # guarded-by: self._cond
+            self._cond = threading.Condition()
+
+        def wait(self):
+            with self._cond:
+                while not self.done:
+                    self._cond.wait(timeout=1.0)
+""")
+    assert found == []
+
+
+def test_escaping_lambda_checked_without_the_lock():
+    # a lambda handed to a timer runs LATER, lock released — accessing a
+    # guarded field inside it is a finding even when written under lock
+    found = lock_check("""
+    import threading
+
+    class C:
+        def __init__(self):
+            self.n = 0              # guarded-by: self._lock
+            self._lock = threading.Lock()
+            self.timer = None
+
+        def arm(self):
+            with self._lock:
+                self.timer = self._later(lambda: self.n + 1)
+
+        def _later(self, fn):
+            return fn
+""")
+    assert rules(found) == ["guarded-field"]
+
+
+def test_unannotated_class_is_skipped():
+    found = lock_check("""
+    class Plain:
+        def __init__(self):
+            self.n = 0
+
+        def bump(self):
+            self.n += 1
+""")
+    assert found == []
+
+
+# --------------------------------------------------------------------------
+# event-protocol static pass
+# --------------------------------------------------------------------------
+
+
+def test_declared_emit_sites_clean():
+    found = events.check_source(textwrap.dedent("""
+        def go(log):
+            log.emit(SUBMIT, 0.0, array="a")
+            log.emit(COMPLETE, 1.0, array="a", task=0, ok=True)
+            log.emit(RETRY, 2.0, array="a", task=0, attempt=2)
+            log.emit(LOST, 3.0, array="a", task=0, attempt=2)
+    """))
+    assert found == []
+
+
+def test_string_literal_kind_flagged():
+    found = events.check_source('log.emit("submit", 0.0)')
+    assert rules(found) == ["event-kind"]
+    assert "literal" in found[0].message
+
+
+def test_dynamic_kind_flagged():
+    found = events.check_source(textwrap.dedent("""
+        def fwd(log, kind):
+            log.emit(kind, 0.0)
+    """))
+    assert rules(found) == ["event-kind"]
+    assert found[0].qualname == "fwd"
+
+
+@pytest.mark.parametrize("call,missing", [
+    ("log.emit(COMPLETE, 1.0, array='a', task=0)", "ok"),
+    ("log.emit(RETRY, 1.0, array='a', task=0)", "attempt"),
+    ("log.emit(LOST, 1.0, array='a', task=0)", "attempt"),
+])
+def test_missing_required_field_flagged(call, missing):
+    found = events.check_source(call)
+    assert rules(found) == ["event-fields"]
+    assert missing in found[0].message
+
+
+# --------------------------------------------------------------------------
+# API-misuse lints
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stmt", [
+    "from repro.core.realproc import compare",
+    "import repro.core.realproc",
+    "from repro.core import realproc",
+    "import repro.taskarray.runner_real",
+    "from repro.taskarray.runner_sim import SimRunner",
+])
+def test_deprecated_imports_flagged_once(stmt):
+    found = api.check_source(stmt)
+    assert rules(found) == ["deprecated-import"]
+
+
+def test_modern_imports_clean():
+    found = api.check_source(textwrap.dedent("""
+        from repro.exec import get_backend
+        from repro.exec.pool import launch_once
+        from repro.taskarray import TaskGraph
+    """))
+    assert found == []
+
+
+def test_shim_modules_themselves_exempt():
+    found = api.check_source("import repro.core.realproc",
+                             path="src/repro/core/realproc.py")
+    assert found == []
+
+
+def test_bare_popen_flagged():
+    found = api.check_source(textwrap.dedent("""
+        import subprocess
+
+        def spawn_all(n):
+            procs = [subprocess.Popen(["sleep", "1"]) for _ in range(n)]
+            assert procs
+            return procs
+    """))
+    assert rules(found) == ["popen-teardown"]
+
+
+def test_popen_in_try_finally_clean():
+    found = api.check_source(textwrap.dedent("""
+        import subprocess
+
+        def run():
+            procs = []
+            try:
+                procs.append(subprocess.Popen(["sleep", "1"]))
+            finally:
+                for p in procs:
+                    p.kill()
+    """))
+    assert found == []
+
+
+def test_popen_with_teardown_handler_clean():
+    found = api.check_source(textwrap.dedent("""
+        import subprocess
+
+        def run(teardown):
+            procs = []
+            try:
+                procs.append(subprocess.Popen(["sleep", "1"]))
+            except BaseException:
+                teardown(procs)
+                raise
+    """))
+    assert found == []
+
+
+def test_popen_factory_return_exempt():
+    found = api.check_source(textwrap.dedent("""
+        import subprocess, sys
+
+        def _spawn():
+            return subprocess.Popen([sys.executable, "-c", "pass"])
+    """))
+    assert found == []
+
+
+# --------------------------------------------------------------------------
+# runtime protocol machine (validate_trace / check_trace)
+# --------------------------------------------------------------------------
+
+
+def good_trace():
+    log = EventLog()
+    log.emit(SUBMIT, 0.0, array="a", detail={"n_tasks": 2})
+    log.emit(DISPATCH, 0.1, array="a")
+    log.emit(COMPLETE, 0.5, array="a", task=0, attempt=1, ok=True)
+    log.emit(RETRY, 0.6, array="a", task=1, attempt=2,
+             detail={"straggler": False})
+    log.emit(LOST, 0.7, array="a", task=1, attempt=2)
+    log.emit(FAULT, 0.7, array="a", detail={"chaos": "kill-launcher"})
+    log.emit(RETRY, 0.8, array="a", task=1, attempt=3,
+             detail={"straggler": True})
+    log.emit(RESPAWN, 0.9, detail={"launcher": 0})
+    log.emit(COMPLETE, 1.0, array="a", task=1, attempt=3, ok=False)
+    return log
+
+
+def test_valid_trace_stats():
+    stats = validate_trace(good_trace(), max_retries=1)
+    assert stats.ok == 1 and stats.failed == 1
+    assert stats.tasks == 2 and stats.arrays == ["a"]
+    assert stats.retries == 1 and stats.stragglers == 1
+    assert stats.lost == 1 and stats.faults == 1 and stats.respawns == 1
+    assert stats.span == pytest.approx(1.0)
+
+
+def violation_rules(log, **kw):
+    _, violations = check_trace(log, **kw)
+    return [v.rule for v in violations]
+
+
+def test_event_after_terminal_rejected():
+    log = good_trace()
+    log.emit(COMPLETE, 1.1, array="a", task=0, attempt=1, ok=True)
+    assert violation_rules(log) == ["after-terminal"]
+
+
+def test_attempt_skip_rejected():
+    log = EventLog()
+    log.emit(SUBMIT, 0.0, array="a")
+    log.emit(RETRY, 0.5, array="a", task=0, attempt=3)  # 1 -> 3 skips 2
+    assert violation_rules(log) == ["attempt"]
+
+
+def test_stale_attempt_complete_rejected():
+    log = EventLog()
+    log.emit(SUBMIT, 0.0, array="a")
+    log.emit(RETRY, 0.5, array="a", task=0, attempt=2)
+    log.emit(COMPLETE, 0.6, array="a", task=0, attempt=1, ok=True)
+    assert violation_rules(log) == ["attempt"]
+
+
+def test_respawn_without_fault_or_lost_rejected():
+    log = EventLog()
+    log.emit(SUBMIT, 0.0, array="a")
+    log.emit(RESPAWN, 0.5, detail={"launcher": 1})
+    assert violation_rules(log) == ["order"]
+
+
+def test_task_event_before_submit_rejected():
+    log = EventLog()
+    log.emit(COMPLETE, 0.1, array="a", task=0, attempt=1, ok=True)
+    assert violation_rules(log) == ["order"]
+
+
+def test_duplicate_submit_rejected():
+    log = EventLog()
+    log.emit(SUBMIT, 0.0, array="a")
+    log.emit(SUBMIT, 0.1, array="a")
+    assert violation_rules(log) == ["order"]
+
+
+def test_unknown_kind_rejected():
+    log = EventLog()
+    log.emit(SUBMIT, 0.0, array="a")
+    log.emit("compelte", 0.5, array="a", task=0)
+    assert violation_rules(log) == ["unknown-kind"]
+
+
+def test_missing_required_field_rejected_at_runtime():
+    log = EventLog()
+    log.emit(SUBMIT, 0.0, array="a")
+    log.emit(COMPLETE, 0.5, array="a", task=0, attempt=1)  # no ok=
+    assert "missing-field" in violation_rules(log)
+
+
+def test_retry_budget_enforced():
+    log = EventLog()
+    log.emit(SUBMIT, 0.0, array="a")
+    for k in (2, 3):
+        log.emit(RETRY, 0.1 * k, array="a", task=0, attempt=k,
+                 detail={"straggler": False})
+    assert violation_rules(log, max_retries=1) == ["retry-budget"]
+    assert violation_rules(log, max_retries=2) == []
+
+
+def test_second_straggler_duplicate_rejected():
+    log = EventLog()
+    log.emit(SUBMIT, 0.0, array="a")
+    for k in (2, 3):
+        log.emit(RETRY, 0.1 * k, array="a", task=0, attempt=k,
+                 detail={"straggler": True})
+    assert violation_rules(log) == ["retry-budget"]
+
+
+def test_validate_trace_raises_with_details():
+    log = good_trace()
+    log.emit(COMPLETE, 1.1, array="a", task=0, attempt=1, ok=True)
+    with pytest.raises(ProtocolError) as exc:
+        validate_trace(log)
+    assert exc.value.violations[0].rule == "after-terminal"
+    assert "after-terminal" in str(exc.value)
+
+
+# --------------------------------------------------------------------------
+# suppression baseline
+# --------------------------------------------------------------------------
+
+
+def test_baseline_suppresses_and_reports_stale(tmp_path):
+    found = lock_check(BAD_PEEK)
+    fp = found[0].fingerprint
+    assert ":" in fp and str(found[0].line) not in fp.split("::")
+    entries = {fp: "known quirk", "guarded-field::gone.py::X.y::z": "old"}
+    left, stale = apply_baseline(found, entries)
+    assert left == []
+    assert stale == ["guarded-field::gone.py::X.y::z"]
+
+
+def test_baseline_requires_justification(tmp_path):
+    p = tmp_path / "base.txt"
+    p.write_text("rule::path.py::C.m::field\n")
+    with pytest.raises(BaselineError, match="justification"):
+        load_baseline(str(p))
+    p.write_text("# comment\n\nrule::path.py::C.m::field  # because\n")
+    assert load_baseline(str(p)) == {"rule::path.py::C.m::field":
+                                     "because"}
+
+
+# --------------------------------------------------------------------------
+# the CLI runner end-to-end (what `make lint` executes)
+# --------------------------------------------------------------------------
+
+
+def test_runner_fails_on_known_bad_file(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent("""
+        import threading
+        from repro.core.realproc import compare
+
+        class C:
+            def __init__(self):
+                self.n = 0              # guarded-by: self._lock
+                self._lock = threading.Lock()
+
+            def bump(self):
+                self.n += 1
+    """))
+    out = io.StringIO()
+    assert runner.run([str(bad)], out=out) == 1
+    text = out.getvalue()
+    assert "guarded-field" in text and "deprecated-import" in text
+
+
+def test_runner_stale_baseline_fails(tmp_path):
+    ok = tmp_path / "ok.py"
+    ok.write_text("x = 1\n")
+    base = tmp_path / "base.txt"
+    base.write_text("rule::gone.py::C.m::f  # obsolete\n")
+    out = io.StringIO()
+    assert runner.run([str(ok)], baseline=str(base), out=out) == 1
+    assert "STALE" in out.getvalue()
+
+
+def test_repo_is_lint_clean(monkeypatch):
+    """THE acceptance criterion: `make lint` exits 0 — the real tree with
+    the real checked-in baseline has zero unsuppressed findings."""
+    monkeypatch.chdir(ROOT)
+    out = io.StringIO()
+    code = runner.run(None, baseline="lint-baseline.txt", out=out)
+    assert code == 0, f"repo not lint-clean:\n{out.getvalue()}"

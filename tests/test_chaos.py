@@ -19,6 +19,7 @@ from repro.exec import (FAULT, LOST, RESPAWN, RETRY,
                         DROP_RESULT, FAIL_DISPATCH, KILL_LAUNCHER,
                         Fault, FaultPlan, WorkerPool, get_backend)
 from repro.exec.base import COMPLETE, EventLog
+from repro.exec.protocol import validate_trace
 from repro.taskarray import RetryPolicy, TaskGraph
 from repro.taskarray.gather import FAILED, OK
 
@@ -34,7 +35,10 @@ def dual_graph(n=8, name="a", work=0.01):
 
 
 def accounting(res, name="a"):
-    """The cross-backend identity: per-task terminal state + event counts."""
+    """The cross-backend identity: per-task terminal state + event counts.
+    Every chaos stream must ALSO replay cleanly against the declared
+    protocol — validating here covers all the conformance tests at once."""
+    validate_trace(res.events)
     counts = res.events.counts()
     return {
         "tasks": [(r.status, r.attempts) for r in res[name].results],
@@ -197,6 +201,9 @@ def test_procpool_kill_launcher_recovers_fast_no_failed_no_zombie():
     counts = res.events.counts()
     assert counts.get(LOST, 0) == res["a"].summary.lost
     assert counts.get(FAULT, 0) >= 2   # chaos kill + pool crash report
+    # the KILL_LAUNCHER chaos stream replays against the declared protocol
+    stats = validate_trace(res.events, max_retries=3)
+    assert stats.faults >= 2 and stats.lost >= 1
     # no zombies: every launcher ever spawned (victim included) is reaped
     assert pool._all_launchers
     assert all(lp.poll() is not None for lp in pool._all_launchers)

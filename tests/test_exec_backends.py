@@ -18,6 +18,7 @@ import pytest
 from repro.exec import LaunchPlan, LaunchReport, get_backend
 from repro.exec.base import (COMPLETE, DISPATCH, READY, RETRY, SUBMIT,
                              EventLog, ExecBackend)
+from repro.exec.protocol import validate_trace
 from repro.taskarray import RetryPolicy, TaskGraph
 
 BACKENDS = ["sim", "procpool", "inline"]
@@ -77,6 +78,9 @@ def test_same_graph_same_values_and_events(name):
             seen_submit.add(e.array)
         elif e.kind == COMPLETE:
             assert e.array in seen_submit
+    # and the whole stream conforms to the declared protocol
+    stats = validate_trace(res.events)
+    assert stats.ok == n + 1 and stats.failed == 0
 
 
 @pytest.mark.parametrize("name", BACKENDS)
@@ -89,6 +93,7 @@ def test_injected_failure_emits_retry_events(name):
     retries = res.events.of(RETRY)
     assert len(retries) >= 1
     assert any(e.array == "sq" and e.attempt >= 2 for e in retries)
+    validate_trace(res.events, max_retries=2)
 
 
 @pytest.mark.parametrize("name", BACKENDS)
@@ -104,6 +109,7 @@ def test_launch_report_invariants(name):
     ready = rep.events.of(READY)
     assert len(ready) >= 1                         # per node or per proc
     assert max(e.t for e in ready) <= rep.t_ready + 1e-9
+    validate_trace(rep.events)                     # launch streams conform
     row = rep.row()
     assert set(row) >= {"backend", "topology", "nodes", "procs_per_node",
                         "launch_s", "rate_per_s"}
@@ -155,6 +161,7 @@ def test_retry_accounting_identical_on_all_backends():
                                min_straggler_samples=1 << 20,
                                scan_period=0.05))
         arr = res["tasks"]
+        validate_trace(res.events, max_retries=2)
         acct[name] = {
             "per_task": [(r.status, r.attempts) for r in arr.results],
             "retries": arr.summary.retries,
